@@ -1,0 +1,18 @@
+"""Shared helpers for the benchmark harness."""
+import time
+from contextlib import contextmanager
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0

@@ -1,0 +1,38 @@
+"""Paper Fig 4: multi-tenancy satisfaction rate (warm-start %) versus
+requested workload intensity — no-policy vs Edge-MultiAI (iWS-BFE)."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import generate_workload, simulate
+
+
+def run() -> None:
+    zoos = paper_zoos()
+    apps = list(zoos)
+    # intensity knob: shorter inter-arrival => higher concurrency
+    for iat in (24000.0, 12000.0, 8000.0, 5000.0, 3000.0):
+        rows = {}
+        t0 = time.perf_counter()
+        for policy in ("none", "iws-bfe"):
+            warm, conc = [], []
+            for seed in (0, 1, 2):
+                wl = generate_workload(apps, requests_per_app=40,
+                                       mean_iat_ms=iat, deviation=0.2,
+                                       seed=seed)
+                res = simulate(zoos, wl, policy=policy,
+                               budget_mb=DEFAULT_MEMORY_MB)
+                warm.append(res.metrics.warm_ratio)
+                conc.append(res.mean_concurrency)
+            rows[policy] = (float(np.mean(warm)), float(np.mean(conc)))
+        us = (time.perf_counter() - t0) * 1e6 / 6
+        gain = rows["iws-bfe"][0] / max(rows["none"][0], 1e-9)
+        emit(f"fig4/iat{int(iat)}", us,
+             f"conc={rows['iws-bfe'][1]:.2f} none={rows['none'][0]:.3f} "
+             f"iws={rows['iws-bfe'][0]:.3f} gain={gain:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Figs 5, 6, 8: cold-start %, normalized accuracy, and robustness
+versus prediction deviation, for all four policies + no-policy."""
+import time
+
+from benchmarks.common import emit
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import sweep_policies
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    out = sweep_policies(
+        paper_zoos(), deviations=(0.0, 0.3, 0.6, 0.9),
+        policies=("none", "lfe", "bfe", "ws-bfe", "iws-bfe"),
+        budget_mb=DEFAULT_MEMORY_MB, seeds=(0, 1, 2), requests_per_app=50)
+    us = (time.perf_counter() - t0) * 1e6 / 20
+    for fig, key in (("fig5_coldstart", "cold"), ("fig6_accuracy", "acc"),
+                     ("fig8_robustness", "rob")):
+        for policy, per_d in out.items():
+            vals = " ".join(f"d{d:.1f}={m[key]:.3f}"
+                            for d, m in sorted(per_d.items()))
+            emit(f"{fig}/{policy}", us, vals)
+    # headline paper-claim ratios at 30% deviation
+    d = 0.3
+    lfe, ws, iws = (out[p][d]["cold"] for p in ("lfe", "ws-bfe", "iws-bfe"))
+    emit("fig5/claims", us,
+         f"iws_vs_lfe={1 - iws / max(lfe, 1e-9):.0%}_fewer "
+         f"iws_vs_ws={1 - iws / max(ws, 1e-9):.0%}_fewer "
+         f"ws_vs_lfe={1 - ws / max(lfe, 1e-9):.0%}_fewer")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig 7: bi-objective (cold-start % vs model error) Pareto analysis
+over the window parameter Δ = D + α·σ, α ∈ [0, 2], at 30% deviation."""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import generate_workload, simulate
+
+
+def run() -> None:
+    zoos = paper_zoos()
+    apps = list(zoos)
+    points = {}
+    t0 = time.perf_counter()
+    for policy in ("lfe", "ws-bfe", "iws-bfe"):
+        for alpha in (0.0, 0.5, 1.02, 1.5, 2.0):
+            cold, err = [], []
+            for seed in (0, 1):
+                wl = generate_workload(apps, requests_per_app=40,
+                                       deviation=0.3, seed=seed)
+                res = simulate(zoos, wl, policy=policy, alpha=alpha,
+                               budget_mb=DEFAULT_MEMORY_MB)
+                m = res.metrics
+                cold.append(m.cold_ratio + m.fail_ratio)
+                err.append(1.0 - m.mean_accuracy())
+            points[(policy, alpha)] = (float(np.mean(cold)),
+                                       float(np.mean(err)))
+    us = (time.perf_counter() - t0) * 1e6 / len(points)
+    # Pareto front: points not dominated by any other
+    front = []
+    for k, (c, e) in points.items():
+        if not any(c2 <= c and e2 <= e and (c2, e2) != (c, e)
+                   for c2, e2 in points.values()):
+            front.append(k)
+    for (policy, alpha), (c, e) in sorted(points.items()):
+        tag = "PARETO" if (policy, alpha) in front else "dominated"
+        emit(f"fig7/{policy}/a{alpha}", us,
+             f"cold={c:.3f} err={e:.3f} {tag}")
+    on_front = {p for p, _ in front}
+    emit("fig7/front", us, f"policies_on_front={sorted(on_front)}")
+
+
+if __name__ == "__main__":
+    run()

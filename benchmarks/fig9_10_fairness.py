@@ -1,0 +1,31 @@
+"""Paper Figs 9 & 10: per-application cold-start % and accuracy — the
+fairness analysis (no tenant may be starved or systematically degraded)."""
+import time
+
+from benchmarks.common import emit
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import generate_workload, simulate
+
+
+def run() -> None:
+    zoos = paper_zoos()
+    t0 = time.perf_counter()
+    wl = generate_workload(list(zoos), requests_per_app=60, deviation=0.3,
+                           seed=0)
+    for policy in ("none", "lfe", "ws-bfe", "iws-bfe"):
+        res = simulate(zoos, wl, policy=policy,
+                       budget_mb=DEFAULT_MEMORY_MB)
+        per = res.metrics.per_app()
+        us = (time.perf_counter() - t0) * 1e6
+        colds = [v["cold_ratio"] + v["fail_ratio"] for v in per.values()]
+        accs = [v["norm_accuracy"] for v in per.values()]
+        spread_c = max(colds) - min(colds)
+        spread_a = max(accs) - min(accs)
+        emit(f"fig9_10/{policy}", us,
+             f"cold_spread={spread_c:.3f} acc_spread={spread_a:.3f} " +
+             " ".join(f"{a}:c={v['cold_ratio']:.2f}/a={v['norm_accuracy']:.2f}"
+                      for a, v in per.items()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""§Perf before/after: baseline vs optimized roofline tables side by side.
+
+Reads results/dryrun_baseline.json and results/dryrun_optimized.json and
+emits per-cell dominant-term speedups.
+"""
+import json
+import os
+
+from benchmarks.common import emit
+
+_RESULTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+
+
+def _load(name):
+    path = os.path.join(_RESULTS, name)
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        cells = json.load(f)
+    return {(c["arch"], c["shape"]): c for c in cells
+            if not c["multi_pod"] and c["status"] == "OK"
+            and "roofline" in c}
+
+
+def run() -> None:
+    base = _load("dryrun_baseline.json")
+    opt = _load("dryrun_optimized.json")
+    if not base or not opt:
+        emit("perf_compare/missing", 0.0, "need both dryrun json files")
+        return
+    speedups = []
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key]["roofline"], opt[key]["roofline"]
+        sp = b["bound_s"] / max(o["bound_s"], 1e-12)
+        speedups.append(sp)
+        hbm_b = base[key]["memory"].get("hbm_fraction", 0) * 100
+        hbm_o = opt[key]["memory"].get("hbm_fraction", 0) * 100
+        emit(f"perf/{key[0]}/{key[1]}", o["bound_s"] * 1e6,
+             f"bound {b['bound_s'] * 1e3:.1f}ms->{o['bound_s'] * 1e3:.1f}ms "
+             f"({sp:.2f}x) dominant {b['dominant']}->{o['dominant']} "
+             f"useful {b['useful_ratio']:.2f}->{o['useful_ratio']:.2f} "
+             f"hbm {hbm_b:.0f}%->{hbm_o:.0f}%")
+    if speedups:
+        import math
+        geo = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+        emit("perf/geomean_speedup", 0.0,
+             f"{geo:.2f}x over {len(speedups)} cells")
+
+
+if __name__ == "__main__":
+    run()

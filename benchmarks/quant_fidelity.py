@@ -1,0 +1,42 @@
+"""Table II analogue for the 10 assigned LM tenants: per-precision size and
+fidelity (top-1 agreement vs the full-precision reference) — the accuracy
+axis of each tenant's real model zoo."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as T
+from repro.quant.quantize import fidelity, params_nbytes, quantize_params
+
+
+def run() -> None:
+    key = jax.random.key(0)
+    fwd = lambda c, p, b: T.forward(c, p, b)[..., 0, :]
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch, reduced=True)
+        params = T.init_params(cfg, key, jnp.float32)
+        shape = ((2, 24) if cfg.num_codebooks == 1
+                 else (2, 24, cfg.num_codebooks))
+        batch = {"tokens": jax.random.randint(key, shape, 0,
+                                              cfg.vocab_size)}
+        if cfg.frontend == "vision_stub":
+            batch["patch_embeds"] = jax.random.normal(
+                key, (2, cfg.num_vision_tokens, cfg.d_model))
+        base = params_nbytes(params)
+        t0 = time.perf_counter()
+        parts = []
+        for bits in (8, 4):
+            q = quantize_params(params, bits=bits, group=32)
+            f = fidelity(cfg, params, q, batch, fwd)
+            parts.append(
+                f"int{bits}:size={params_nbytes(q) / base:.2f}x,"
+                f"agree={f['top1_agreement']:.1f}%")
+        us = (time.perf_counter() - t0) * 1e6 / 2
+        emit(f"quant_fidelity/{arch}", us, " ".join(parts))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Roofline table: reads the dry-run JSON cache (results/dryrun.json) and
+prints the three terms per (arch × shape) on the single-pod mesh."""
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+_RESULTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+# optimized table preferred; baseline kept for §Perf before/after
+_CANDIDATES = [os.path.join(_RESULTS, n) for n in
+               ("dryrun_optimized.json", "dryrun.json",
+                "dryrun_baseline.json")]
+
+
+def run(path: str = None) -> None:
+    if path is None:
+        found = [p for p in _CANDIDATES if os.path.exists(p)]
+        if not found:
+            emit("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --both-meshes "
+                 "--out results/dryrun_optimized.json` first")
+            return
+        path = found[0]
+    with open(path) as f:
+        cells = json.load(f)
+    emit("roofline/source", 0.0, os.path.basename(path))
+    t0 = time.perf_counter()
+    single = [c for c in cells if not c["multi_pod"]]
+    for c in sorted(single, key=lambda c: (c["arch"], c["shape"])):
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        if c["status"].startswith("SKIP"):
+            emit(name, 0.0, c["status"])
+            continue
+        if c["status"] != "OK" or "roofline" not in c:
+            emit(name, 0.0, f"{c['status']} {c.get('error', '')[:80]}")
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {})
+        emit(name, r["bound_s"] * 1e6,
+             f"compute={r['compute_s'] * 1e3:.2f}ms "
+             f"memory={r['memory_s'] * 1e3:.2f}ms "
+             f"coll={r['collective_s'] * 1e3:.2f}ms "
+             f"dominant={r['dominant']} useful={r['useful_ratio']:.2f} "
+             f"hbm={mem.get('hbm_fraction', 0) * 100:.0f}%")
+    mp = [c for c in cells if c["multi_pod"]]
+    ok = sum(c["status"] == "OK" for c in mp)
+    skip = sum(c["status"].startswith("SKIP") for c in mp)
+    emit("roofline/multi_pod_gate", (time.perf_counter() - t0) * 1e6,
+         f"{ok}_ok {skip}_skip {len(mp) - ok - skip}_fail of {len(mp)}")
+
+
+if __name__ == "__main__":
+    run()

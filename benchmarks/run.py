@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Invoke as
+``PYTHONPATH=src python -m benchmarks.run`` (all) or with module names:
+``python -m benchmarks.run fig5_6_8_policies roofline``.
+"""
+import sys
+import traceback
+
+from benchmarks import (fig4_multitenancy, fig5_6_8_policies, fig7_pareto,
+                        fig9_10_fairness, perf_compare, quant_fidelity,
+                        roofline, serving_throughput, table1_load_vs_infer)
+
+MODULES = {
+    "table1_load_vs_infer": table1_load_vs_infer,
+    "fig4_multitenancy": fig4_multitenancy,
+    "fig5_6_8_policies": fig5_6_8_policies,
+    "fig7_pareto": fig7_pareto,
+    "fig9_10_fairness": fig9_10_fairness,
+    "quant_fidelity": quant_fidelity,
+    "serving_throughput": serving_throughput,
+    "roofline": roofline,
+    "perf_compare": perf_compare,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            MODULES[name].run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table I analogue: load time vs inference time vs size per zoo
+variant — measured on REAL reduced models (storage = disk, memory = device)
+to validate the load≫infer asymmetry that motivates Edge-MultiAI."""
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.quant.quantize import params_nbytes, quantize_params
+
+
+def _save_tree(tree, d):
+    flat, _ = jax.tree.flatten(tree)
+    for i, leaf in enumerate(flat):
+        np.save(os.path.join(d, f"{i}.npy"), np.asarray(leaf))
+
+
+def _load_tree(template, d):
+    import ml_dtypes
+
+    flat, treedef = jax.tree.flatten(template)
+    out = []
+    for i, leaf in enumerate(flat):
+        arr = np.load(os.path.join(d, f"{i}.npy"))
+        if arr.dtype.kind == "V":  # numpy stores bf16 as void16
+            arr = arr.view(ml_dtypes.bfloat16)
+        out.append(jnp.asarray(arr))
+    tree = treedef.unflatten(out)
+    jax.block_until_ready(tree)
+    return tree
+
+
+def run() -> None:
+    for arch in ("tinyllama-1.1b", "gemma2-2b", "mamba2-780m"):
+        cfg = get_config(arch, reduced=True)
+        params = T.init_params(cfg, jax.random.key(0), jnp.float32)
+        tokens = jnp.zeros((1, 32), jnp.int32)
+        batch = {"tokens": tokens}
+        fwd = jax.jit(lambda p, b: T.forward(cfg, p, b))
+        for bits in (16, 8):
+            variant = quantize_params(params, bits=bits, group=32)
+            size_mb = params_nbytes(variant) / 2 ** 20
+            with tempfile.TemporaryDirectory() as d:
+                _save_tree(variant, d)
+                t0 = time.perf_counter()
+                loaded = _load_tree(variant, d)
+                load_ms = (time.perf_counter() - t0) * 1e3
+            out = fwd(loaded, batch)
+            jax.block_until_ready(out)  # compile
+            t0 = time.perf_counter()
+            for _ in range(5):
+                jax.block_until_ready(fwd(loaded, batch))
+            infer_ms = (time.perf_counter() - t0) / 5 * 1e3
+            ratio = load_ms / max(infer_ms, 1e-9)
+            emit(f"table1/{arch}/int{bits}", infer_ms * 1e3,
+                 f"size={size_mb:.2f}MB load={load_ms:.1f}ms "
+                 f"infer={infer_ms:.1f}ms load/infer={ratio:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

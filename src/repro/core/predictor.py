@@ -1,0 +1,141 @@
+"""The paper's two lightweight many-to-one vanilla RNN predictors
+(§III-A "NN Model Manager"), implemented and trained in pure JAX:
+
+* **Request predictor** — consumes the recent inter-arrival history of one
+  application and predicts the next inter-arrival gap (hence the next
+  request time).
+* **Memory predictor** — consumes the recent sequence of memory-usage
+  samples and predicts availability at the next decision point.
+
+Both are the same tiny architecture (the paper calls it "edge-friendly"):
+one tanh RNN cell + linear head, trained with AdamW on sliding windows.
+No Pallas kernel is warranted here — the model is a few thousand FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optim import AdamW
+
+
+def init_rnn(key: jax.Array, hidden: int = 32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wx": jax.random.normal(k1, (1, hidden), jnp.float32) * 0.5,
+        "wh": jax.random.normal(k2, (hidden, hidden), jnp.float32)
+        * (hidden ** -0.5),
+        "b": jnp.zeros((hidden,), jnp.float32),
+        "wo": jax.random.normal(k3, (hidden, 1), jnp.float32)
+        * (hidden ** -0.5),
+        "bo": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def rnn_forward(params: dict, xs: jnp.ndarray) -> jnp.ndarray:
+    """xs: (B, T) normalized series -> (B,) prediction (many-to-one)."""
+    B, T = xs.shape
+    h0 = jnp.zeros((B, params["wh"].shape[0]), jnp.float32)
+
+    def cell(h, x):
+        h = jnp.tanh(x[:, None] @ params["wx"] + h @ params["wh"]
+                     + params["b"])
+        return h, ()
+
+    h, _ = jax.lax.scan(cell, h0, jnp.moveaxis(xs, 1, 0))
+    return (h @ params["wo"] + params["bo"])[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit(params, opt_state, xs, ys, *, steps: int = 200):
+    opt = AdamW(lr=1e-2, weight_decay=0.0, clip_norm=1.0)
+
+    def loss_fn(p):
+        pred = rnn_forward(p, xs)
+        return jnp.mean((pred - ys) ** 2)
+
+    def step(carry, _):
+        p, s = carry
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, s, _ = opt.update(g, s, p)
+        return (p, s), loss
+
+    (params, opt_state), losses = jax.lax.scan(
+        step, (params, opt_state), None, length=steps)
+    return params, opt_state, losses
+
+
+@dataclass
+class SeriesPredictor:
+    """Sliding-window RNN regressor over a scalar series."""
+    context: int = 16
+    hidden: int = 32
+    seed: int = 0
+
+    def __post_init__(self):
+        self.params = init_rnn(jax.random.key(self.seed), self.hidden)
+        self.opt_state = AdamW(lr=1e-2, weight_decay=0.0).init(self.params)
+        self.mean = 1.0
+        self.history: list[float] = []
+        self.losses: Optional[np.ndarray] = None
+
+    def observe(self, value: float) -> None:
+        self.history.append(float(value))
+
+    def fit(self, steps: int = 200) -> float:
+        """Train on all (context -> next) windows in the history.
+        Returns the final training loss."""
+        h = np.asarray(self.history, np.float32)
+        if len(h) < self.context + 2:
+            return float("nan")
+        self.mean = float(np.mean(h)) or 1.0
+        hn = h / self.mean
+        windows = np.lib.stride_tricks.sliding_window_view(
+            hn, self.context + 1)
+        xs = jnp.asarray(windows[:, :-1])
+        ys = jnp.asarray(windows[:, -1])
+        self.params, self.opt_state, losses = _fit(
+            self.params, self.opt_state, xs, ys, steps=steps)
+        self.losses = np.asarray(losses)
+        return float(losses[-1])
+
+    def predict(self) -> float:
+        """Predict the next value from the trailing context."""
+        h = np.asarray(self.history, np.float32)
+        if len(h) < self.context:
+            return float(np.mean(h)) if len(h) else self.mean
+        xs = jnp.asarray(h[-self.context:] / self.mean)[None]
+        return float(rnn_forward(self.params, xs)[0] * self.mean)
+
+
+class RequestPredictor(SeriesPredictor):
+    """Predicts the next request *time* of one application from its
+    inter-arrival history."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self.last_time: Optional[float] = None
+
+    def observe_request(self, t: float) -> None:
+        if self.last_time is not None:
+            self.observe(max(t - self.last_time, 1e-6))
+        self.last_time = t
+
+    def predict_next_time(self) -> float:
+        if self.last_time is None:
+            return float("inf")
+        gap = max(self.predict(), 1e-6)
+        return self.last_time + gap
+
+
+class MemoryPredictor(SeriesPredictor):
+    """Predicts near-future memory availability from recent usage samples."""
+
+    def predict_free(self, budget: float) -> float:
+        used = self.predict()
+        return max(budget - used, 0.0)

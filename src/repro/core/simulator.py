@@ -1,0 +1,216 @@
+"""E2C-style discrete-event workload simulator (§IV-A).
+
+Reproduces the paper's evaluation protocol:
+
+* per-application request streams with exponential inter-arrival times,
+  equal request counts per app;
+* a *predicted* workload derived from the actual one with a controlled
+  deviation knob ``d`` — per-request Gaussian jitter of std ``d·IAT`` plus
+  prediction drop-outs with probability ``d/2`` (the paper's "unexpected
+  requests"); the realized divergence is reported as KL between actual
+  and predicted inter-arrival distributions, as in the paper;
+* Δ estimated from prediction residuals as ``D + α·σ`` (Fig 7 sweeps α);
+* an event loop that fires proactive-load triggers at ``t_pred − Δ − θ``
+  and actual requests in timestamp order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.manager import EdgeMultiAI, Metrics
+from repro.core.model_zoo import ModelZoo
+
+
+@dataclass
+class Workload:
+    requests: List[Tuple[float, str]]  # (t, app) sorted by t
+    predictions: Dict[str, List[float]]  # app -> predicted request times
+    horizon_ms: float
+    deviation: float
+    delta_D: float  # mean |residual| over matched prediction pairs
+    delta_sigma: float  # std of residuals
+    kl: float  # realized KL(actual ‖ predicted) inter-arrival divergence
+
+    def delta(self, alpha: float = 1.0) -> float:
+        return self.delta_D + alpha * self.delta_sigma
+
+    @property
+    def mean_iat(self) -> float:
+        per_app: Dict[str, List[float]] = {}
+        for t, a in self.requests:
+            per_app.setdefault(a, []).append(t)
+        gaps = []
+        for ts in per_app.values():
+            ts = sorted(ts)
+            gaps += [b - a for a, b in zip(ts, ts[1:])]
+        return float(np.mean(gaps)) if gaps else 1.0
+
+
+def generate_workload(
+    apps: List[str],
+    *,
+    requests_per_app: int = 60,
+    mean_iat_ms: float = 8000.0,
+    deviation: float = 0.3,
+    seed: int = 0,
+) -> Workload:
+    rng = np.random.default_rng(seed)
+    requests: List[Tuple[float, str]] = []
+    predictions: Dict[str, List[float]] = {}
+    residuals: List[float] = []
+    actual_iats: List[float] = []
+    pred_iats: List[float] = []
+    for a in apps:
+        gaps = rng.exponential(mean_iat_ms, requests_per_app)
+        times = np.cumsum(gaps)
+        actual_iats += list(gaps)
+        requests += [(float(t), a) for t in times]
+        preds = []
+        for t in times:
+            if rng.random() < deviation / 2:
+                continue  # dropped prediction -> unexpected request
+            jitter = rng.normal(0.0, deviation * mean_iat_ms)
+            preds.append(float(t + jitter))
+            residuals.append(abs(jitter))
+        preds.sort()
+        predictions[a] = preds
+        pred_iats += list(np.diff(preds))
+    requests.sort()
+    horizon = max(t for t, _ in requests) + mean_iat_ms
+    D = float(np.mean(residuals)) if residuals else 0.0
+    sigma = float(np.std(residuals)) if residuals else 0.0
+    kl = _kl_divergence(np.asarray(actual_iats), np.asarray(pred_iats))
+    return Workload(requests, predictions, horizon, deviation, D, sigma, kl)
+
+
+def _kl_divergence(p_samples: np.ndarray, q_samples: np.ndarray,
+                   bins: int = 30) -> float:
+    """Histogram KL(actual ‖ predicted) over inter-arrival distributions."""
+    if len(p_samples) == 0 or len(q_samples) == 0:
+        return float("inf")
+    hi = float(max(p_samples.max(), q_samples.max()))
+    edges = np.linspace(0.0, hi + 1e-9, bins + 1)
+    p, _ = np.histogram(p_samples, edges)
+    q, _ = np.histogram(q_samples, edges)
+    p = (p + 1e-3) / (p.sum() + 1e-3 * bins)
+    q = (q + 1e-3) / (q.sum() + 1e-3 * bins)
+    return float(np.sum(p * np.log(p / q)))
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class SimResult:
+    metrics: Metrics
+    workload: Workload
+    mean_concurrency: float
+    policy: str
+
+
+def simulate(
+    zoos: Dict[str, ModelZoo],
+    workload: Workload,
+    *,
+    policy: str = "iws-bfe",
+    budget_mb: float = 1200.0,
+    alpha: float = 1.0,
+    delta_ms: Optional[float] = None,
+    history_ms: Optional[float] = None,
+) -> SimResult:
+    # Δ is a *system* parameter profiled at nominal prediction accuracy
+    # (the paper: "obtained from profiling past request predictions");
+    # the robustness experiments then vary the *test* deviation while Δ
+    # stays fixed.  When not supplied, calibrate from this workload.
+    delta = (delta_ms if delta_ms is not None
+             else max(workload.delta(alpha), 1.0))
+    # H = mean inter-arrival of the *merged* request stream (the LRU-K
+    # "recently requested" horizon): per-app IAT divided by tenant count.
+    history = (history_ms if history_ms is not None
+               else workload.mean_iat / max(len(zoos), 1))
+    mgr = EdgeMultiAI(zoos, budget_mb, policy=policy, delta_ms=delta,
+                      history_ms=history)
+
+    # Build the event heap: (t, priority, kind, app, payload)
+    events: List[Tuple[float, int, str, str, float]] = []
+    for t, a in workload.requests:
+        heapq.heappush(events, (t, 1, "request", a, t))
+    for a, preds in workload.predictions.items():
+        theta = zoos[a].largest.load_ms
+        for tp in preds:
+            trig = tp - delta - theta
+            heapq.heappush(events, (trig, 0, "proactive", a, tp))
+
+    # Lazily advance each tenant's "next prediction" pointer.
+    pred_ptr = {a: 0 for a in zoos}
+
+    def refresh_predictions(now: float) -> None:
+        for a, preds in workload.predictions.items():
+            i = pred_ptr[a]
+            while i < len(preds) and preds[i] + delta < now:
+                i += 1
+            pred_ptr[a] = i
+            mgr.set_prediction(a, preds[i] if i < len(preds) else math.inf)
+
+    # Mean concurrency = time-average of |A*| (apps inside their window).
+    conc_acc, conc_t, last_t = 0.0, 0.0, 0.0
+
+    while events:
+        t, _, kind, app, payload = heapq.heappop(events)
+        refresh_predictions(t)
+        n_act = len(mgr.state.maximalist_set(t, delta))
+        conc_acc += n_act * max(t - last_t, 0.0)
+        conc_t += max(t - last_t, 0.0)
+        last_t = t
+        if kind == "proactive":
+            mgr.set_prediction(app, payload)
+            mgr.proactive_load(app, t)
+        else:
+            mgr.on_request(app, t)
+
+    mean_conc = conc_acc / conc_t if conc_t else 0.0
+    return SimResult(mgr.metrics(), workload, mean_conc, policy)
+
+
+def sweep_policies(
+    zoos: Dict[str, ModelZoo],
+    *,
+    deviations: Tuple[float, ...] = (0.0, 0.3, 0.6, 0.9),
+    policies: Tuple[str, ...] = ("lfe", "bfe", "ws-bfe", "iws-bfe"),
+    budget_mb: float = 1200.0,
+    requests_per_app: int = 60,
+    mean_iat_ms: float = 8000.0,
+    seeds: Tuple[int, ...] = (0, 1, 2),
+) -> Dict[str, Dict[float, dict]]:
+    """Cross product used by the Fig 5/6/8 benchmarks."""
+    out: Dict[str, Dict[float, dict]] = {p: {} for p in policies}
+    apps = list(zoos)
+    # Fixed system Δ: calibrated once at the nominal deviation (the
+    # production predictor's accuracy), then held while test deviation
+    # sweeps — this is what the paper's robustness axis measures.
+    calib = generate_workload(
+        apps, requests_per_app=requests_per_app,
+        mean_iat_ms=mean_iat_ms, deviation=0.15, seed=max(seeds) + 1)
+    delta_ms = calib.delta(1.0)
+    for d in deviations:
+        for p in policies:
+            agg = {"cold": [], "warm": [], "fail": [], "acc": [], "rob": []}
+            for s in seeds:
+                wl = generate_workload(
+                    apps, requests_per_app=requests_per_app,
+                    mean_iat_ms=mean_iat_ms, deviation=d, seed=s)
+                res = simulate(zoos, wl, policy=p, budget_mb=budget_mb,
+                               delta_ms=delta_ms)
+                m = res.metrics
+                agg["cold"].append(m.cold_ratio)
+                agg["warm"].append(m.warm_ratio)
+                agg["fail"].append(m.fail_ratio)
+                agg["acc"].append(m.mean_accuracy())
+                agg["rob"].append(m.robustness())
+            out[p][d] = {k: float(np.mean(v)) for k, v in agg.items()}
+            out[p][d]["kl"] = wl.kl
+    return out

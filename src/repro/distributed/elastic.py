@@ -1,0 +1,48 @@
+"""Elastic scaling: reshard a running state onto a different mesh.
+
+Fleet reality: a pod drops out, or capacity frees up — the job should
+continue on the new topology from the latest checkpoint without retracing
+history.  Two paths:
+
+* :func:`reshard` — live state → new mesh (device_put with new shardings);
+* checkpoint restore with target shardings (``checkpoint.restore``) — the
+  cold path after a full restart.
+
+Both work because all state (params, optimizer, compression error) is
+plain pytrees with mesh-agnostic logical shapes; only PartitionSpecs
+change.  The data pipeline re-derives rank assignments from the new world
+size, and global batch is preserved (per-rank batch rescales).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def reshard(tree: PyTree, spec_tree: PyTree, new_mesh: Mesh) -> PyTree:
+    """Place every leaf of ``tree`` onto ``new_mesh`` with ``spec_tree``."""
+
+    def place(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(place, tree, spec_tree,
+                        is_leaf=lambda x: x is None)
+
+
+def validate_elastic_plan(old_mesh: Mesh, new_mesh: Mesh,
+                          global_batch: int) -> dict:
+    """Check a proposed mesh change keeps the job well-posed."""
+    old_dp = old_mesh.shape.get("data", 1) * old_mesh.shape.get("pod", 1)
+    new_dp = new_mesh.shape.get("data", 1) * new_mesh.shape.get("pod", 1)
+    report = {
+        "old_devices": old_mesh.size,
+        "new_devices": new_mesh.size,
+        "old_per_rank_batch": global_batch // old_dp,
+        "new_per_rank_batch": global_batch // new_dp,
+        "ok": global_batch % new_dp == 0,
+    }
+    return report

@@ -1,0 +1,128 @@
+"""Pallas TPU decode attention: one query token per sequence against a long
+KV cache (GQA), with per-sequence valid lengths, sliding window and softcap.
+
+TPU mapping
+-----------
+* Grid ``(B, KV, nT)``: the KV-cache sequence dim iterates innermost in
+  blocks of ``block_t``; the (G, D) query group for this kv-head rides in
+  VMEM the whole time.  Running max / denom / accumulator scratch carries
+  the online softmax across KV blocks — a single pass over the cache, the
+  memory-bound regime decode lives in (roofline: bytes ≈ KV-cache size).
+* Per-sequence ``lengths`` arrive via scalar prefetch (SMEM) so the mask
+  needs no HBM traffic; fully-invalid tail blocks still iterate but write
+  nothing (a block-skip map is a future optimization, noted in §Perf).
+* G·D and block_t are lane-aligned; with (G, D, bt) = (8, 128, 512) the
+  VMEM working set is ≈ 0.8 MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   bt, nt, scale, window, softcap, prefix):
+    b, it = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bt, D)
+    v = v_ref[0, 0].astype(jnp.float32)  # (bt, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, bt)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    length = len_ref[b]
+    kv_pos = it * bt + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kv_pos < length
+    if window:
+        win_ok = kv_pos >= length - window
+        if prefix:
+            win_ok |= kv_pos < prefix
+        mask &= win_ok
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(it == nt - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, T, KV, D)
+    v_cache: jnp.ndarray,  # (B, T, KV, D)
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = 0.0,
+    prefix: int = 0,
+    block_t: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, T, KV, _ = k_cache.shape
+    G = H // KV
+    if scale == 0.0:
+        scale = D ** -0.5
+    bt = min(block_t, T)
+    Tp = math.ceil(T / bt) * bt
+    qg = q.reshape(B, KV, G, D)
+    kt = jnp.moveaxis(k_cache, (0, 2, 1, 3), (0, 1, 2, 3))  # (B, KV, T, D)
+    vt = jnp.moveaxis(v_cache, (0, 2, 1, 3), (0, 1, 2, 3))
+    if Tp != T:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    nt = Tp // bt
+
+    kernel = functools.partial(
+        _decode_kernel, bt=bt, nt=nt, scale=scale, window=window,
+        softcap=softcap, prefix=prefix)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t, *_: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t, *_: (b, h, t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kt, vt)
+    return out.reshape(B, H, D)

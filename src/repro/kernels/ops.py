@@ -1,0 +1,100 @@
+"""Dispatching wrappers around the perf-critical kernels.
+
+``impl`` resolution:
+  * "pallas"    — the Pallas TPU kernels (compiled on TPU; ``interpret=True``
+                  execution on CPU for validation).
+  * "reference" — the pure-jnp oracles in :mod:`repro.kernels.ref`.
+  * "auto"      — pallas on TPU backends, reference elsewhere.  The dry-run /
+                  roofline path always lowers the reference graph (Pallas TPU
+                  kernels cannot lower on the CPU backend), which is
+                  mathematically identical.
+
+Models call these entry points only; nothing below this layer leaks upward.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_FORCED: Optional[str] = os.environ.get("REPRO_KERNEL_IMPL") or None
+
+
+def set_impl(impl: Optional[str]) -> None:
+    """Force "pallas" / "reference" globally (None restores auto)."""
+    global _FORCED
+    _FORCED = impl
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    if _FORCED is not None:
+        return _FORCED
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0, scale=0.0,
+                    q_offset=0, prefix=0, impl="auto"):
+    if resolve_impl(impl) == "pallas":
+        from . import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset, prefix=prefix,
+            interpret=_interpret())
+    return ref.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        q_offset=q_offset, prefix=prefix)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap=0.0,
+                     scale=0.0, prefix=0, impl="auto"):
+    if resolve_impl(impl) == "pallas":
+        from . import decode_attention as da
+
+        return da.decode_attention(
+            q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+            scale=scale, prefix=prefix, interpret=_interpret())
+    return ref.decode_attention(
+        q, k_cache, v_cache, lengths, window=window, softcap=softcap,
+        scale=scale, prefix=prefix)
+
+
+def quant_matmul(x, w_q, scales, *, out_dtype=None, impl="auto"):
+    if resolve_impl(impl) == "pallas":
+        from . import quant_matmul as qm
+
+        return qm.quant_matmul(
+            x, w_q, scales, out_dtype=out_dtype, interpret=_interpret())
+    return ref.quant_matmul(x, w_q, scales, out_dtype=out_dtype)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, D, *, init_state=None, return_state=False,
+             chunk=256, impl="auto"):
+    if resolve_impl(impl) == "pallas":
+        from . import ssd_scan as ssd
+
+        return ssd.ssd_scan(
+            x, dt, A, Bm, Cm, D, init_state=init_state,
+            return_state=return_state, chunk=chunk, interpret=_interpret())
+    return ref.ssd_scan_chunked(
+        x, dt, A, Bm, Cm, D, init_state=init_state,
+        return_state=return_state, chunk=chunk)
+
+
+# Thin passthroughs (no kernel needed; kept here so models never import ref).
+ssd_step = ref.ssd_step
+causal_conv1d = ref.causal_conv1d
+causal_conv1d_step = ref.causal_conv1d_step
+quantize_weights = ref.quantize_weights

@@ -1,0 +1,332 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the mathematically authoritative implementations: the Pallas
+kernels are validated against them (tests/test_kernels.py sweeps shapes and
+dtypes), and the dry-run/roofline path lowers THESE, since Pallas TPU
+kernels cannot be lowered on the CPU backend.  Everything here is plain
+``jnp`` + ``lax`` and jit/grad-compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -2.3819763e38  # close to bf16 min; avoids NaN from (-inf) - (-inf)
+
+
+def _softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: batched multi-head attention with GQA, causal masking,
+# optional sliding window and logit soft-capping (gemma2 / hymba semantics).
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, T, KV, D)
+    v: jnp.ndarray,  # (B, T, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = unbounded
+    softcap: float = 0.0,
+    scale: float = 0.0,
+    q_offset: int = 0,  # absolute position of q[0] (prefill continuation)
+    prefix: int = 0,  # positions < prefix always visible (meta tokens)
+) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    _, T, KV, _ = k.shape
+    G = H // KV
+    if scale == 0.0:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, S, KV, G, D)
+    # scores: (B, KV, G, S, T)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf)
+    if softcap:
+        s = _softcap(s, softcap)
+    q_pos = q_offset + jnp.arange(S)[:, None]  # (S, 1)
+    kv_pos = jnp.arange(T)[None, :]  # (1, T)
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window:
+        mask &= (kv_pos > q_pos - window) | (kv_pos < prefix)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: single-query-token attention against a long KV cache.
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q: jnp.ndarray,  # (B, H, D) — one new token per sequence
+    k_cache: jnp.ndarray,  # (B, T, KV, D)
+    v_cache: jnp.ndarray,  # (B, T, KV, D)
+    lengths: jnp.ndarray,  # (B,) int32 — valid prefix length per sequence
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = 0.0,
+    prefix: int = 0,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, T, KV, _ = k_cache.shape
+    G = H // KV
+    if scale == 0.0:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, KV, G, D) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, kf)  # (B, KV, G, T)
+    if softcap:
+        s = _softcap(s, softcap)
+    kv_pos = jnp.arange(T)[None, :]  # (1, T)
+    valid = kv_pos < lengths[:, None]
+    if window:
+        valid &= (kv_pos >= (lengths[:, None] - window)) | (kv_pos < prefix)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, vf)
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul: activation @ dequantize(w_q, scales).
+# Weights are stored int8 (int4 values occupy int8 storage in [-8, 7];
+# bit-packing is a TPU-memory-layout concern handled inside the Pallas
+# kernel, not in the oracle).  Scales are per (K-group, N-column).
+# ---------------------------------------------------------------------------
+def quant_matmul(
+    x: jnp.ndarray,  # (..., K)
+    w_q: jnp.ndarray,  # (K, N) int8
+    scales: jnp.ndarray,  # (K // group, N) float
+    *,
+    out_dtype=None,
+) -> jnp.ndarray:
+    K, N = w_q.shape
+    G = scales.shape[0]
+    group = K // G
+    out_dtype = out_dtype or x.dtype
+    w = w_q.astype(jnp.float32).reshape(G, group, N) * scales.astype(
+        jnp.float32
+    )[:, None, :]
+    w = w.reshape(K, N)
+    y = jnp.einsum("...k,kn->...n", x.astype(jnp.float32), w)
+    return y.astype(out_dtype)
+
+
+def quantize_weights(
+    w: jnp.ndarray, *, bits: int = 8, group: int = 128
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(group, column) absmax quantization. w: (K, N)."""
+    K, N = w.shape
+    if K % group:
+        group = K  # degenerate single group
+    G = K // group
+    wg = w.astype(jnp.float32).reshape(G, group, N)
+    qmax = float(2 ** (bits - 1) - 1)
+    absmax = jnp.max(jnp.abs(wg), axis=1)  # (G, N)
+    scales = jnp.maximum(absmax / qmax, 1e-8)
+    q = jnp.clip(jnp.round(wg / scales[:, None, :]), -qmax - 1, qmax)
+    return q.reshape(K, N).astype(jnp.int8), scales.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan: Mamba-2 state-space-duality scan (sequential oracle).
+#   h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)
+#   y_t = C_t · h_t + D ⊙ x_t
+# ---------------------------------------------------------------------------
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) — post-softplus, positive
+    A: jnp.ndarray,  # (H,) — negative decay rates
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    D: jnp.ndarray,  # (H,)
+    *,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    return_state: bool = False,
+):
+    Bb, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B, S, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    Af = A.astype(jnp.float32)
+    h0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dtt * Af[None, :])  # (B, H)
+        dBx = jnp.einsum("bh,bhn,bhp->bhpn", dtt, bt, xt)
+        h = decay[:, :, None, None] * h + dBx
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    hT, ys = lax.scan(step, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT.astype(jnp.float32)
+    return y
+
+
+def ssd_scan_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    D: jnp.ndarray,  # (H,)
+    *,
+    chunk: int = 256,
+    init_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Chunked SSD (the actual Mamba-2 algorithm): quadratic intra-chunk
+    attention-like form + linear inter-chunk state recurrence.  This is the
+    formulation the Pallas kernel tiles; it is mathematically identical to
+    :func:`ssd_scan` (validated in tests) but maps onto the MXU.
+    """
+    Bb, S0, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S0)
+    if S0 % Q:
+        # Pad the tail with dt=0 steps: decay=exp(0)=1 and the dt factor
+        # zeroes the padded contributions, so the result is exact.
+        pad = Q - S0 % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // Q
+    xf = x.astype(jnp.float32).reshape(Bb, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, Q, H)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(
+        Bb, nc, Q, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(
+        Bb, nc, Q, H, N)
+    Af = A.astype(jnp.float32)
+
+    a = dtf * Af[None, None, None, :]  # (B, nc, Q, H) — log decay per step
+    a_cum = jnp.cumsum(a, axis=2)  # inclusive within-chunk cumulative decay
+    # Intra-chunk ("diagonal block") term.
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    iq = jnp.arange(Q)
+    tri = iq[:, None] >= iq[None, :]
+    Ldec = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cf, Bf)
+    M = cb * Ldec * dtf[:, :, None, :, :]  # weight by dt at the key position
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", M, xf)
+    # Chunk-final states.
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B, nc, Q, H)
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_to_end * dtf, Bf, xf)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B, nc, H)
+    h0 = (
+        jnp.zeros((Bb, H, P, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        s_c, dec = inp
+        h_new = dec[:, :, None, None] * h + s_c
+        return h_new, h  # emit the state at chunk START
+
+    hT, h_prev = lax.scan(
+        step, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B, nc, H, P, N)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cf, h_prev, jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(Bb, S, H, P)[:, :S0]
+    y = y + x.astype(jnp.float32)[:, :S0] * (
+        D.astype(jnp.float32)[None, None, :, None])
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y
+
+
+def ssd_step(
+    x: jnp.ndarray,  # (B, H, P) — one token
+    dt: jnp.ndarray,  # (B, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, G, N)
+    Cm: jnp.ndarray,  # (B, G, N)
+    D: jnp.ndarray,  # (H,)
+    state: jnp.ndarray,  # (B, H, P, N)
+):
+    """Single decode step of the SSD recurrence. Returns (y, new_state)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    decay = jnp.exp(dtf * A.astype(jnp.float32)[None, :])
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dtf, Bf, xf)
+    new_state = decay[:, :, None, None] * state.astype(jnp.float32) + dBx
+    y = jnp.einsum("bhn,bhpn->bhp", Cf, new_state)
+    y = y + xf * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (Mamba-2 front conv) — oracle + single-step update.
+# ---------------------------------------------------------------------------
+def causal_conv1d(
+    x: jnp.ndarray,  # (B, S, C)
+    w: jnp.ndarray,  # (W, C) depthwise taps
+    b: jnp.ndarray,  # (C,)
+    *,
+    init: Optional[jnp.ndarray] = None,  # (B, W-1, C) left context
+) -> jnp.ndarray:
+    B, S, C = x.shape
+    W = w.shape[0]
+    if init is None:
+        init = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([init, x], axis=1).astype(jnp.float32)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + S, :] * w[i].astype(jnp.float32)[None, None, :]
+    out = out + b.astype(jnp.float32)[None, None, :]
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def causal_conv1d_step(
+    x: jnp.ndarray,  # (B, C) — one token
+    w: jnp.ndarray,  # (W, C)
+    b: jnp.ndarray,  # (C,)
+    buf: jnp.ndarray,  # (B, W-1, C) rolling context
+):
+    """Returns (y, new_buf)."""
+    W = w.shape[0]
+    full = jnp.concatenate([buf, x[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w.astype(jnp.float32))
+    y = jax.nn.silu(y + b.astype(jnp.float32)[None, :]).astype(x.dtype)
+    return y, full[:, 1:, :]

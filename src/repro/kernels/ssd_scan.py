@@ -1,0 +1,151 @@
+"""Pallas TPU Mamba-2 SSD scan (chunked state-space duality).
+
+The paper's SSM tenants (mamba2, hymba) spend their FLOPs here.  The SSD
+trick converts the elementwise recurrence into MXU-shaped work: a
+quadratic *intra-chunk* block (attention-like (Q,Q)·(Q,P) matmuls) plus a
+linear *inter-chunk* state recurrence — this kernel fuses both so the
+(H, P, N) state never round-trips to HBM between chunks.
+
+TPU mapping
+-----------
+* Grid ``(B, H, nc)`` with the chunk index innermost; the per-(b, h) SSM
+  state (P, N) lives in VMEM scratch across the whole chunk loop.
+* Per-head decay scalars A[h], D[h] arrive via SMEM scalar prefetch.
+* Tiles at (Q, P, N) = (256, 64, 128): x 256·64·4B + B/C 2·256·128·4B +
+  decay matrix 256·256·4B + state 64·128·4B ≈ 0.7 MB VMEM.
+* The intra-chunk cumulative decay uses a lower-triangular ones matmul
+  (MXU) rather than a lane scan.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, init_ref,
+                y_ref, state_ref, state_scr, *, nc, Q):
+    h, ic = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32).reshape(Q, 1)  # (Q, 1)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    A = a_ref[h]
+    Dk = d_ref[h]
+
+    a = dt * A  # (Q, 1) log-decay per step
+    # Inclusive cumulative sum via lower-triangular ones matmul (MXU).
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (ii >= jj).astype(jnp.float32)
+    a_cum = jax.lax.dot_general(
+        tril, a, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (Q, 1)
+
+    # Intra-chunk (attention-like) term.
+    seg = a_cum - a_cum.reshape(1, Q)  # (Qi, Qj)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (Q, Q)
+    M = cb * L * dt.reshape(1, Q)  # dt at the key position
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (Q, P)
+
+    # Inter-chunk contribution from the carried state.
+    state = state_scr[...]  # (P, N)
+    y += jnp.exp(a_cum) * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (Q, P)
+
+    # State update: decay to chunk end + new outer products.
+    a_end = a_cum[Q - 1:Q, :]  # (1, 1)
+    w = jnp.exp(a_end - a_cum) * dt  # (Q, 1)
+    state_scr[...] = jnp.exp(a_end) * state + jax.lax.dot_general(
+        x, Bm * w, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (P, N)
+
+    y_ref[0, 0] = (y + x * Dk).astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        state_ref[0, 0] = state_scr[...]
+
+
+def ssd_scan(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    D: jnp.ndarray,  # (H,)
+    *,
+    init_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+    chunk: int = 256,
+    interpret: bool = False,
+):
+    Bb, S0, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S0)
+    pad = (Q - S0 % Q) % Q
+    xt = jnp.moveaxis(x, (0, 2, 1, 3), (0, 1, 2, 3))  # (B, H, S, P)
+    dtt = jnp.moveaxis(dt, (0, 2, 1), (0, 1, 2))  # (B, H, S)
+    bt = jnp.moveaxis(Bm, (0, 2, 1, 3), (0, 1, 2, 3))  # (B, G, S, N)
+    ct = jnp.moveaxis(Cm, (0, 2, 1, 3), (0, 1, 2, 3))
+    if pad:
+        # dt=0 padding is exact: decay 1, zero contribution.
+        xt = jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dtt = jnp.pad(dtt, ((0, 0), (0, 0), (0, pad)))
+        bt = jnp.pad(bt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        ct = jnp.pad(ct, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // Q
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, Q=Q)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c, *_: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c, *_: (b, h, c)),
+            pl.BlockSpec((1, 1, Q, N),
+                         lambda b, h, c, *_, rep=rep: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, Q, N),
+                         lambda b, h, c, *_, rep=rep: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c, *_: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c, *_: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c, *_: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+    )
+    y, state = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A.astype(jnp.float32), D.astype(jnp.float32),
+      xt, dtt, bt, ct, init_state)
+    y = jnp.moveaxis(y[:, :, :S0, :], (0, 1, 2, 3), (0, 2, 1, 3))
+    if return_state:
+        return y, state
+    return y

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent on the
+production mesh without hardware.
+
+For every (architecture × input shape) cell this lowers + compiles the real
+step function (train_step for train shapes, prefill/serve_step for serving
+shapes) against ShapeDtypeStruct inputs on:
+
+  * the single-pod 16×16 (data, model) mesh  — also the roofline source;
+  * the 2×16×16 (pod, data, model) multi-pod mesh — proves the pod axis
+    shards.
+
+It records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+FLOPs/bytes, the collective schedule (parsed from the partitioned HLO) and
+— single-pod only — the L2/L4 fully-unrolled marginal probe that recovers
+exact per-layer costs (see launch/roofline.py).  Results go to a JSON cache
+consumed by benchmarks/ and EXPERIMENTS.md.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch import roofline as RL
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.launch.steps import build_cell
+from repro.models import transformer as T
+from repro.models.config import SHAPE_SPECS, cell_is_runnable
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "results", "dryrun")
+
+
+def pick_grad_accum(cfg, shape_name, mesh) -> int:
+    """Choose microbatching so the remat residual stack (~6 bytes/act
+    element × L layers) stays under ~5 GB/device.  Powers of two, ≤ 16."""
+    from repro.launch.steps import DP_ONLY_MAX_PARAMS
+
+    seq, gbatch, kind = SHAPE_SPECS[shape_name]
+    if kind != "train":
+        return 1
+    if (cfg.param_count() < DP_ONLY_MAX_PARAMS
+            and gbatch % mesh.size == 0):
+        return 1  # pure-DP cells: one row per device already
+    dp = 1
+    for a in mesh.axis_names:
+        if a in ("pod", "data"):
+            dp *= mesh.shape[a]
+    b_loc = max(gbatch // dp, 1)
+    per_b = seq * cfg.d_model * 6 * cfg.num_layers  # bytes per batch row
+    accum = 1
+    while accum < min(b_loc, 16) and b_loc // accum * per_b > 5e9:
+        accum *= 2
+    return accum
+
+
+def _lower_compile(cfg, shape_name, mesh, *, moe_impl="dense",
+                   grad_accum=None, qcache=False, dp_only=None):
+    ga = (pick_grad_accum(cfg, shape_name, mesh)
+          if grad_accum is None else grad_accum)
+    fn, args, in_sh, out_sh, donate = build_cell(
+        cfg, shape_name, mesh, moe_impl=moe_impl, grad_accum=ga,
+        qcache=qcache, dp_only=dp_only)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _mem_stats(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": float(ma.argument_size_in_bytes),
+            "output_bytes": float(ma.output_size_in_bytes),
+            "temp_bytes": float(ma.temp_size_in_bytes),
+            "alias_bytes": float(ma.alias_size_in_bytes),
+            "peak_bytes": float(ma.argument_size_in_bytes
+                                + ma.temp_size_in_bytes
+                                + ma.output_size_in_bytes
+                                - ma.alias_size_in_bytes),
+            "hbm_fraction": float(
+                (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                 + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+                / HBM_BYTES),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             probe: bool = True, moe_impl: str = "dense",
+             qcache: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    result: dict = {"arch": arch, "shape": shape_name,
+                    "multi_pod": multi_pod, "moe_impl": moe_impl,
+                    "qcache": qcache}
+    if not cell_is_runnable(arch, shape_name):
+        result["status"] = "SKIP(full-attn)"
+        return result
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    # dp_only is decided ONCE from the full config so the shallow L2/L4
+    # probes lower with the same parallelism mapping.
+    from repro.launch.steps import DP_ONLY_MAX_PARAMS
+    kind = SHAPE_SPECS[shape_name][2]
+    gbatch = SHAPE_SPECS[shape_name][1]
+    dp_only = (kind == "train"
+               and cfg.param_count() < DP_ONLY_MAX_PARAMS
+               and gbatch % mesh.size == 0)
+    result["dp_only"] = dp_only
+    t0 = time.time()
+    try:
+        compiled = _lower_compile(cfg, shape_name, mesh,
+                                  moe_impl=moe_impl, qcache=qcache,
+                                  dp_only=dp_only)
+    except Exception as e:
+        result["status"] = "FAIL"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            _print_cell(result)
+        return result
+    result["compile_s"] = time.time() - t0
+    result["status"] = "OK"
+    result["memory"] = _mem_stats(compiled)
+    base_cost = RL.cost_from_compiled(compiled)
+    result["scan_body_cost"] = {
+        "flops": base_cost.flops, "bytes": base_cost.bytes_accessed,
+        "coll_bytes": base_cost.coll_bytes}
+    del compiled
+
+    if probe and not multi_pod:
+        try:
+            T.set_scan_unroll(64)  # full unroll at probe depths
+            costs = {}
+            for Lp in (2, 4):
+                cfg_p = dataclasses.replace(cfg, num_layers=Lp)
+                # grad_accum=1 for probes: a microbatch scan body would be
+                # counted once; totals are accum-invariant anyway.
+                cp = _lower_compile(cfg_p, shape_name, mesh,
+                                    moe_impl=moe_impl, grad_accum=1,
+                                    qcache=qcache, dp_only=dp_only)
+                costs[Lp] = RL.cost_from_compiled(cp)
+                del cp
+        finally:
+            T.set_scan_unroll(1)
+        total = RL.extrapolate(costs[2], costs[4], cfg.num_layers)
+        result["cost"] = {
+            "flops_per_device": total.flops,
+            "bytes_per_device": total.bytes_accessed,
+            "coll_bytes_per_device": total.coll_bytes,
+            "per_layer_flops": (costs[4] - costs[2]).scaled(0.5).flops,
+        }
+        terms = RL.roofline_terms(total, chips)
+        mf = RL.model_flops(cfg, shape_name)
+        terms["model_flops"] = mf
+        terms["useful_ratio"] = (mf / terms["hlo_flops_global"]
+                                 if terms["hlo_flops_global"] else 0.0)
+        result["roofline"] = terms
+    if verbose:
+        _print_cell(result)
+    return result
+
+
+def _print_cell(r: dict) -> None:
+    tag = f"{r['arch']} × {r['shape']}" + (" [multi-pod]" if r["multi_pod"]
+                                           else "")
+    if r["status"] != "OK":
+        print(f"{tag}: {r['status']} {r.get('error', '')}")
+        return
+    mem = r.get("memory", {})
+    line = (f"{tag}: OK compile={r['compile_s']:.1f}s "
+            f"hbm={mem.get('hbm_fraction', float('nan')) * 100:.1f}%")
+    if "roofline" in r:
+        t = r["roofline"]
+        line += (f" | compute={t['compute_s'] * 1e3:.2f}ms "
+                 f"memory={t['memory_s'] * 1e3:.2f}ms "
+                 f"coll={t['collective_s'] * 1e3:.2f}ms "
+                 f"dominant={t['dominant']} useful={t['useful_ratio']:.2f}")
+    print(line, flush=True)
+
+
+def all_cells():
+    for arch in ARCH_NAMES:
+        for shape_name in SHAPE_SPECS:
+            yield arch, shape_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-probe", action="store_true")
+    ap.add_argument("--moe-impl", default="dense",
+                    choices=["dense", "ragged", "local"])
+    ap.add_argument("--qcache", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    results = []
+    for arch, shape_name in cells:
+        meshes = ([False, True] if args.both_meshes
+                  else [args.multi_pod])
+        for mp in meshes:
+            results.append(run_cell(
+                arch, shape_name, multi_pod=mp, probe=not args.no_probe,
+                moe_impl=args.moe_impl, qcache=args.qcache))
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        keyed = {(r["arch"], r["shape"], r["multi_pod"]): r
+                 for r in existing}
+        for r in results:
+            keyed[(r["arch"], r["shape"], r["multi_pod"])] = r
+        with open(args.out, "w") as f:
+            json.dump(list(keyed.values()), f, indent=1)
+    ok = sum(r["status"] == "OK" for r in results)
+    skip = sum(r["status"].startswith("SKIP") for r in results)
+    fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n=== dry-run: {ok} OK, {skip} skipped, {fail} failed "
+          f"of {len(results)} cells")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

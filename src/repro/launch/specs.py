@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run currency.
+
+``input_specs(cfg, shape_name)`` returns (step_kind, kwargs-of-specs) for
+the train / prefill / decode step of the given assigned shape.  Weak-type
+correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import SHAPE_SPECS, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def token_spec(cfg: ModelConfig, batch: int, seq: int) -> SDS:
+    if cfg.num_codebooks == 1:
+        return SDS((batch, seq), jnp.int32)
+    return SDS((batch, seq, cfg.num_codebooks), jnp.int32)
+
+
+def batch_specs_for(cfg: ModelConfig, shape_name: str,
+                    *, with_labels: bool) -> Dict[str, SDS]:
+    seq, gbatch, _ = SHAPE_SPECS[shape_name]
+    text_seq = seq
+    out: Dict[str, SDS] = {}
+    if cfg.frontend == "vision_stub":
+        # vision tokens count toward the total sequence budget.
+        text_seq = seq - cfg.num_vision_tokens
+        out["patch_embeds"] = SDS(
+            (gbatch, cfg.num_vision_tokens, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = token_spec(cfg, gbatch, text_seq)
+    if with_labels:
+        out["labels"] = token_spec(cfg, gbatch, text_seq)
+    return out
+
+
+def decode_specs_for(cfg: ModelConfig, shape_name: str,
+                     cache_dtype=jnp.bfloat16,
+                     quantized_cache: bool = False) -> Tuple[SDS, Any]:
+    """(token spec, abstract cache at full context length)."""
+    seq, gbatch, _ = SHAPE_SPECS[shape_name]
+    tok = (SDS((gbatch,), jnp.int32) if cfg.num_codebooks == 1
+           else SDS((gbatch, cfg.num_codebooks), jnp.int32))
+    cache = T.abstract_cache(cfg, gbatch, seq, cache_dtype,
+                             quantized_cache)
+    return tok, cache
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                quantized_cache: bool = False):
+    """Returns (kind, specs dict) for the lowered step of this cell."""
+    kind = SHAPE_SPECS[shape_name][2]
+    if kind == "train":
+        return kind, {"batch": batch_specs_for(cfg, shape_name,
+                                               with_labels=True)}
+    if kind == "prefill":
+        return kind, {"batch": batch_specs_for(cfg, shape_name,
+                                               with_labels=False)}
+    tok, cache = decode_specs_for(cfg, shape_name,
+                                  quantized_cache=quantized_cache)
+    return kind, {"tokens": tok, "cache": cache}

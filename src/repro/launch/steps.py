@@ -1,0 +1,125 @@
+"""Lowerable step functions (train / prefill / decode) with shardings.
+
+These are the exact callables the dry-run lowers and a real launch would
+execute — one definition, two uses.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.launch.mesh import data_axes
+from repro.launch.specs import SHAPE_SPECS, input_specs
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optim import AdamW
+from repro.training.train_step import (TrainState, abstract_state,
+                                       make_train_step)
+
+
+# Tenants below this parameter count train in pure-DP mode: the model fits
+# per-chip, so tensor parallelism would only add per-layer all-reduces.
+# Both mesh axes become data axes and all state is fully ZeRO-sharded —
+# the per-step wire drops to one gradient reduce-scatter pass (§Perf B2).
+DP_ONLY_MAX_PARAMS = 4e9
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh, *,
+               moe_impl: str = "dense", param_dtype=jnp.bfloat16,
+               grad_accum: int = 1, dp_only=None, qcache: bool = False):
+    """Returns (fn, example_args, in_shardings, out_shardings, donate) for
+    one (arch × shape) cell on the given mesh."""
+    from repro.distributed.ctx import ShardCtx, set_ctx
+
+    kind, specs = input_specs(cfg, shape_name, quantized_cache=qcache)
+    gbatch = SHAPE_SPECS[shape_name][1]
+    dp = data_axes(mesh)
+    if dp_only is None:
+        dp_only = (kind == "train"
+                   and cfg.param_count() < DP_ONLY_MAX_PARAMS
+                   and gbatch % mesh.size == 0)
+    if dp_only:
+        dp = tuple(mesh.axis_names)  # every mesh axis is a data axis
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    set_ctx(ShardCtx(
+        dp_axes=dp, model_axis="model",
+        model_size=1 if dp_only else mesh.shape["model"],
+        dp_size=dp_size, enabled=True))
+    # Collective-saving remat (§Perf B1) unless the tenant is so large
+    # that the extra saved activations would break the HBM fit.
+    T.set_remat_save_tp(cfg.param_count() < 5e10)
+
+    if kind == "train":
+        opt = AdamW(lr=1e-4)
+        state_abs = abstract_state(cfg, opt, dtype=jnp.float32)
+        if dp_only:
+            # no TP: compute weights replicated; state fully ZeRO-sharded
+            pspecs = jax.tree.map(
+                lambda l: P(*([None] * l.ndim)), state_abs.params)
+        else:
+            pspecs = SH.param_specs(cfg, state_abs.params, mesh)
+        sspecs = SH.state_specs(cfg, state_abs, mesh, pspecs, zero1=True,
+                                dp_axes=dp)
+        bspecs = SH.batch_specs(cfg, specs["batch"], mesh, dp_axes=dp)
+        step = make_train_step(cfg, opt, moe_impl=moe_impl, remat=True,
+                               grad_accum=grad_accum,
+                               zero_specs=sspecs.params)
+
+        def fn(state, batch):
+            new_state, metrics = step(state, batch)
+            return new_state, metrics["loss"]
+
+        args = (state_abs, specs["batch"])
+        in_sh = (sspecs, bspecs)
+        out_sh = (sspecs, P())
+        return fn, args, in_sh, out_sh, (0,)  # donate the train state
+
+    params_abs = T.abstract_params(cfg, param_dtype)
+    # FSDP-2D weights stay ON for serving the huge MoE tenant (its bf16
+    # weights don't fit 1-D); small tenants are unaffected (threshold).
+    pspecs = SH.param_specs(cfg, params_abs, mesh, fsdp=True)
+
+    if kind == "prefill":
+        seq = SHAPE_SPECS[shape_name][0]
+        bspecs = SH.batch_specs(cfg, specs["batch"], mesh, dp_axes=dp)
+        cache_abs = jax.eval_shape(
+            lambda p, b: T.prefill(cfg, p, b, max_len=seq)[1],
+            params_abs, specs["batch"])
+        cspecs = SH.cache_specs(cfg, cache_abs, mesh, dp_axes=dp)
+
+        def fn(params, batch):
+            logits, cache = T.prefill(cfg, params, batch, max_len=seq)
+            return T.greedy_token(cfg, logits), cache
+
+        args = (params_abs, specs["batch"])
+        in_sh = (pspecs, bspecs)
+        tok_spec = P(dp if len(dp) > 1 else dp[0])
+        out_sh = (tok_spec, cspecs)
+        return fn, args, in_sh, out_sh, ()
+
+    # decode
+    tok_abs, cache_abs = specs["tokens"], specs["cache"]
+    cspecs = SH.cache_specs(cfg, cache_abs, mesh, dp_axes=dp)
+    gbatch = tok_abs.shape[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tok_sh = P(dp if len(dp) > 1 else dp[0]) if gbatch % dp_size == 0 else P()
+
+    def fn(params, cache, tokens):
+        logits, new_cache = T.decode_step(cfg, params, cache, tokens,
+                                          moe_impl=moe_impl,
+                                          uniform_pos=True)
+        return T.greedy_token(cfg, logits), new_cache
+
+    args = (params_abs, cache_abs, tok_abs)
+    in_sh = (pspecs, cspecs, tok_sh)
+    out_sh = (tok_sh, cspecs)
+    return fn, args, in_sh, out_sh, (1,)  # donate the KV cache

@@ -1,0 +1,82 @@
+"""Training launcher.
+
+Two modes:
+  * ``--reduced`` — really trains the reduced config on local devices
+    (the CPU-runnable end-to-end path used by examples/ and tests).
+  * default — builds the full config against the production mesh and
+    lower+compiles the train step (the launch path a TPU fleet would run;
+    on CPU this is the dry-run entry).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.fault_tolerance import FailureInjector, run_supervised
+from repro.training.data import DataConfig, SyntheticStream
+from repro.training.optim import AdamW, warmup_cosine
+from repro.training.train_step import init_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[])
+    ap.add_argument("--moe-impl", default="dense")
+    args = ap.parse_args()
+
+    if not args.reduced:
+        # Full-config path: delegate to the dry-run cell (lower+compile).
+        from repro.launch.dryrun import run_cell
+
+        run_cell(args.arch, "train_4k", probe=False)
+        return
+
+    cfg = get_config(args.arch, reduced=True)
+    opt = AdamW(lr=warmup_cosine(args.lr, 10, args.steps),
+                weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(
+        cfg, opt, moe_impl=args.moe_impl, remat=True,
+        grad_accum=args.grad_accum, compression=args.compression))
+    state = init_state(cfg, jax.random.key(0), opt,
+                       compression=args.compression)
+    ds = SyntheticStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+
+    t0 = time.time()
+    report = run_supervised(
+        init_state=state, step_fn=step_fn, batch_fn=batch_fn,
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        injector=(FailureInjector(fail_at_steps=tuple(args.fail_at))
+                  if args.fail_at else None))
+    dt = time.time() - t0
+    print(f"arch={cfg.name} steps={report.steps_completed} "
+          f"restarts={report.restarts} "
+          f"loss {report.losses[0]:.4f} -> {report.losses[-1]:.4f} "
+          f"({dt:.1f}s, {report.steps_completed / dt:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

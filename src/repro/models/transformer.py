@@ -1,0 +1,594 @@
+"""Unified LM-family model: dense / MoE / SSM / hybrid / audio / vlm.
+
+Pure-functional: parameters and caches are explicit pytrees, per-layer
+parameters stacked along a leading ``L`` axis and consumed by a
+``lax.scan`` (keeps HLO size and compile time O(1) in depth — essential
+for the 512-device dry-run and for fleet compile latency).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+# Layer-scan unroll factor.  1 in production (compact HLO); the dry-run's
+# cost probe lowers at full unroll on shallow configs to recover exact
+# per-layer marginal FLOPs/bytes/collectives (cost_analysis counts a scan
+# body once regardless of trip count — measured, see EXPERIMENTS.md).
+SCAN_UNROLL: int = 1
+
+
+def set_scan_unroll(n: int) -> None:
+    global SCAN_UNROLL
+    SCAN_UNROLL = n
+
+
+def _scan(f, init, xs):
+    return lax.scan(f, init, xs, unroll=SCAN_UNROLL)
+
+
+# Save exactly the TP all-reduce outputs across the remat boundary so
+# backward recompute never re-runs forward collectives (§Perf B1).  Costs
+# ~2·L·B·S·D bf16 of residency, so the largest tenant opts out
+# (REMAT_SAVE_TP=False) to stay inside HBM.
+_SAVE_TP = jax.checkpoint_policies.save_only_these_names("tp_out")
+REMAT_SAVE_TP: bool = True
+
+
+def set_remat_save_tp(on: bool) -> None:
+    global REMAT_SAVE_TP
+    REMAT_SAVE_TP = on
+
+
+def _remat_policy():
+    return _SAVE_TP if REMAT_SAVE_TP else None
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[-2] if len(shape) >= 2 else shape[-1]
+    return (jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+            ).astype(dtype)
+
+
+def _layer_param_template(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """name -> (shape, init kind). Shapes are per-layer (no L dim)."""
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    t: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+    hybrid = cfg.family == "hybrid"
+    if cfg.uses_attention:
+        t["ln1"] = ((D,), "zeros")
+        t["wq"] = ((D, H * hd), "dense")
+        t["wk"] = ((D, KV * hd), "dense")
+        t["wv"] = ((D, KV * hd), "dense")
+        t["wo"] = ((H * hd, D), "dense")
+        if cfg.post_norm:
+            t["post_ln1"] = ((D,), "zeros")
+        if cfg.qk_norm:
+            t["q_norm"] = ((hd,), "zeros")
+            t["k_norm"] = ((hd,), "zeros")
+    if cfg.uses_ssm:
+        di = D if hybrid else cfg.ssm_d_inner
+        nh = di // cfg.ssm_head_dim
+        G, N, W = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv_width
+        convd = di + 2 * G * N
+        if not cfg.uses_attention:
+            t["ln1"] = ((D,), "zeros")
+        t["ssm_in"] = ((D, 2 * di + 2 * G * N + nh), "dense")
+        t["conv_w"] = ((W, convd), "conv")
+        t["conv_b"] = ((convd,), "zeros_b")
+        t["A_log"] = ((nh,), "a_log")
+        t["D_skip"] = ((nh,), "ones")
+        t["dt_bias"] = ((nh,), "dt_bias")
+        t["ssm_gnorm"] = ((di,), "zeros")
+        if not hybrid:
+            t["ssm_out"] = ((di, D), "dense")
+    if hybrid:
+        t["fuse_na"] = ((D,), "zeros")
+        t["fuse_ns"] = ((D,), "zeros")
+    if cfg.is_moe:
+        E, Fe = cfg.num_experts, cfg.moe_d_ff
+        t["ln2"] = ((D,), "zeros")
+        t["router"] = ((D, E), "dense")
+        t["we_g"] = ((E, D, Fe), "dense3")
+        t["we_u"] = ((E, D, Fe), "dense3")
+        t["we_d"] = ((E, Fe, D), "dense3")
+        if cfg.num_shared_experts:
+            t["ws_g"] = ((D, F), "dense")
+            t["ws_u"] = ((D, F), "dense")
+            t["ws_d"] = ((F, D), "dense")
+    elif F:
+        t["ln2"] = ((D,), "zeros")
+        t["wg"] = ((D, F), "dense")
+        t["wu"] = ((D, F), "dense")
+        t["wd"] = ((F, D), "dense")
+        if cfg.post_norm:
+            t["post_ln2"] = ((D,), "zeros")
+    return t
+
+
+def _init_one(key, name, shape, kind, dtype):
+    if kind == "zeros":
+        return jnp.zeros(shape, dtype)
+    if kind == "zeros_b":
+        return jnp.zeros(shape, dtype)
+    if kind == "ones":
+        return jnp.ones(shape, jnp.float32)
+    if kind == "a_log":
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u)
+    if kind == "dt_bias":
+        dt = jax.random.uniform(key, shape, jnp.float32, 1e-3, 0.1)
+        return dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    if kind == "conv":
+        return _dense_init(key, shape, dtype, fan_in=shape[0])
+    if kind == "dense3":
+        return _dense_init(key, shape, dtype, fan_in=shape[1])
+    return _dense_init(key, shape, dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.bfloat16) -> PyTree:
+    D, Vp = cfg.d_model, cfg.padded_vocab
+    Kcb = cfg.num_codebooks
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = (jax.random.normal(keys[0], (Kcb, Vp, D), jnp.float32)
+                       * (D ** -0.5)).astype(dtype)
+    if cfg.num_meta_tokens:
+        params["meta"] = (jax.random.normal(
+            keys[1], (cfg.num_meta_tokens, D), jnp.float32) * 0.02
+        ).astype(dtype)
+    template = _layer_param_template(cfg)
+    layer_keys = jax.random.split(keys[2], len(template))
+    stacked = {}
+    for (name, (shape, kind)), k in zip(sorted(template.items()), layer_keys):
+        def one(k_):
+            return _init_one(k_, name, shape, kind, dtype)
+        ks = jax.random.split(k, cfg.num_layers)
+        stacked[name] = jax.vmap(one)(ks)
+    params["layers"] = stacked
+    params["final_norm"] = jnp.zeros((D,), dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(keys[3], (Kcb, D, Vp), dtype, fan_in=D)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, quantized: bool = False) -> PyTree:
+    """Decode cache pytree; leaves stacked (L, ...) for the layer scan.
+    ``quantized=True`` stores k/v as int8 + per-(token, head) scales —
+    half the residency and half the per-step HBM streaming (§Perf C3),
+    the paper's precision-zoo idea applied to the cache."""
+    Lc = cfg.num_layers
+    cache: Dict[str, Any] = {"lengths": jnp.zeros((batch,), jnp.int32)}
+    if cfg.uses_attention:
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        T = max_len + cfg.cache_extra_tokens
+        if quantized and cfg.family != "hybrid":
+            # hybrid blocks fuse attention+SSM per layer; their caches
+            # stay bf16 (the SSM state dominates their residency anyway)
+            cache["k"] = jnp.zeros((Lc, batch, T, KV, hd), jnp.int8)
+            cache["v"] = jnp.zeros((Lc, batch, T, KV, hd), jnp.int8)
+            cache["k_scale"] = jnp.zeros((Lc, batch, T, KV), jnp.float32)
+            cache["v_scale"] = jnp.zeros((Lc, batch, T, KV), jnp.float32)
+        else:
+            cache["k"] = jnp.zeros((Lc, batch, T, KV, hd), dtype)
+            cache["v"] = jnp.zeros((Lc, batch, T, KV, hd), dtype)
+    if cfg.uses_ssm:
+        di = cfg.d_model if cfg.family == "hybrid" else cfg.ssm_d_inner
+        nh = di // cfg.ssm_head_dim
+        convd = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        cache["state"] = jnp.zeros(
+            (Lc, batch, nh, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (Lc, batch, cfg.ssm_conv_width - 1, convd), dtype)
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, quantized: bool = False) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype, quantized))
+
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.array(
+        [cfg.window_for_kind(k) for k in cfg.layer_kinds()], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# One transformer block (handles every family; scanned over layers)
+# ---------------------------------------------------------------------------
+def _block_prefill(cfg: ModelConfig, h, lp, window, positions, *,
+                   moe_impl: str, collect_cache: bool):
+    prefix = cfg.num_meta_tokens
+    new_cache = {}
+    # "tp_out" names mark the row-parallel outputs (the tensors produced
+    # by a model-axis all-reduce).  The remat policy saves exactly these,
+    # so backward recompute does NOT re-run the TP collectives — the
+    # Megatron-style selective-activation-recompute trick (§Perf B1).
+    from jax.ad_checkpoint import checkpoint_name as name
+    if cfg.family == "hybrid":
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_raw, k, v = L.attention_prefill(
+            cfg, lp, x, positions, window, prefix=prefix)
+        ssm_out = L.ssm_prefill(cfg, lp, x, hybrid=True,
+                                return_state=collect_cache)
+        if collect_cache:
+            ssm_raw, state, conv_tail = ssm_out
+            new_cache.update(k=k, v=v, state=state, conv=conv_tail)
+        else:
+            ssm_raw = ssm_out
+        fused = 0.5 * (L.rms_norm(attn_raw, lp["fuse_na"], cfg.norm_eps)
+                       + L.rms_norm(ssm_raw, lp["fuse_ns"], cfg.norm_eps))
+        h = h + name(L.mm(fused, lp["wo"]), "tp_out")
+    elif cfg.uses_ssm:  # pure SSM (mamba2)
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        out = L.ssm_prefill(cfg, lp, x, return_state=collect_cache)
+        if collect_cache:
+            y, state, conv_tail = out
+            new_cache.update(state=state, conv=conv_tail)
+        else:
+            y = out
+        h = h + name(L.mm(y, lp["ssm_out"]), "tp_out")
+    else:  # attention families
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_raw, k, v = L.attention_prefill(
+            cfg, lp, x, positions, window, prefix=prefix)
+        if collect_cache:
+            new_cache.update(k=k, v=v)
+        attn = name(L.mm(attn_raw, lp["wo"]), "tp_out")
+        if cfg.post_norm:
+            attn = L.rms_norm(attn, lp["post_ln1"], cfg.norm_eps)
+        h = h + attn
+    # FFN
+    if cfg.is_moe:
+        x2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + name(L.moe_ffn(cfg, lp, x2, impl=moe_impl), "tp_out")
+    elif cfg.d_ff:
+        x2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        ff = name(L.mlp(cfg, x2, lp["wg"], lp["wu"], lp["wd"]), "tp_out")
+        if cfg.post_norm:
+            ff = L.rms_norm(ff, lp["post_ln2"], cfg.norm_eps)
+        h = h + ff
+    return h, new_cache
+
+
+def _block_decode(cfg: ModelConfig, h, lp, window, cache_layer, lengths, *,
+                  moe_impl: str, uniform_pos: bool = False):
+    prefix = cfg.num_meta_tokens
+    new_cache = {}
+    if cfg.family == "hybrid":
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_raw, nk, nv = L.attention_decode(
+            cfg, lp, x, cache_layer["k"], cache_layer["v"], lengths, window,
+            prefix=prefix, uniform_pos=uniform_pos)
+        ssm_raw, nstate, nconv = L.ssm_decode(
+            cfg, lp, x, cache_layer["state"], cache_layer["conv"],
+            hybrid=True)
+        new_cache.update(k=nk, v=nv, state=nstate, conv=nconv)
+        fused = 0.5 * (L.rms_norm(attn_raw, lp["fuse_na"], cfg.norm_eps)
+                       + L.rms_norm(ssm_raw, lp["fuse_ns"], cfg.norm_eps))
+        h = h + L.mm(fused, lp["wo"])
+    elif cfg.uses_ssm:
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        y, nstate, nconv = L.ssm_decode(
+            cfg, lp, x, cache_layer["state"], cache_layer["conv"])
+        new_cache.update(state=nstate, conv=nconv)
+        h = h + L.mm(y, lp["ssm_out"])
+    elif "k_scale" in cache_layer:  # int8 KV cache (§Perf C3)
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_raw, knq, kns, vnq, vns = L.attention_decode_q(
+            cfg, lp, x, cache_layer["k"], cache_layer["k_scale"],
+            cache_layer["v"], cache_layer["v_scale"], lengths, window,
+            prefix=prefix)
+        new_cache.update(k=knq, k_scale=kns, v=vnq, v_scale=vns)
+        attn = L.mm(attn_raw, lp["wo"])
+        if cfg.post_norm:
+            attn = L.rms_norm(attn, lp["post_ln1"], cfg.norm_eps)
+        h = h + attn
+    else:
+        x = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        attn_raw, nk, nv = L.attention_decode(
+            cfg, lp, x, cache_layer["k"], cache_layer["v"], lengths, window,
+            prefix=prefix, uniform_pos=uniform_pos)
+        new_cache.update(k=nk, v=nv)
+        attn = L.mm(attn_raw, lp["wo"])
+        if cfg.post_norm:
+            attn = L.rms_norm(attn, lp["post_ln1"], cfg.norm_eps)
+        h = h + attn
+    if cfg.is_moe:
+        x2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.moe_ffn(cfg, lp, x2, impl=moe_impl)
+    elif cfg.d_ff:
+        x2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        ff = L.mlp(cfg, x2, lp["wg"], lp["wu"], lp["wd"])
+        if cfg.post_norm:
+            ff = L.rms_norm(ff, lp["post_ln2"], cfg.norm_eps)
+        h = h + ff
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_tokens(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: (B, S) int32, or (B, S, Kcb) for multi-codebook audio."""
+    emb = params["embed"]  # (Kcb, Vp, D)
+    if cfg.num_codebooks == 1:
+        h = jnp.take(emb[0], tokens, axis=0)
+    else:
+        per = [jnp.take(emb[i], tokens[..., i], axis=0)
+               for i in range(cfg.num_codebooks)]
+        h = sum(per)
+    if cfg.emb_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def lm_logits(cfg: ModelConfig, params, h: jnp.ndarray) -> jnp.ndarray:
+    """h: (B, S, D) -> logits (B, S, Kcb, Vp) float32."""
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = jnp.swapaxes(params["embed"], 1, 2)  # (Kcb, D, Vp)
+    else:
+        w = L.dense_w(params["head"])
+    logits = jnp.einsum("bsd,kdv->bskv", h, w).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = L.softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training) and loss
+# ---------------------------------------------------------------------------
+def _frontend(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray]):
+    """Returns (h, loss_mask) after stub frontends / meta tokens."""
+    h = embed_tokens(cfg, params, batch["tokens"])
+    B = h.shape[0]
+    mask = jnp.ones(h.shape[:2], jnp.float32)
+    if cfg.frontend == "vision_stub":
+        vis = batch["patch_embeds"].astype(h.dtype)  # (B, Nv, D) — STUB input
+        h = jnp.concatenate([vis, h], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, vis.shape[1]), jnp.float32), mask], axis=1)
+    if cfg.num_meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta"][None], (B,) + params["meta"].shape).astype(h.dtype)
+        h = jnp.concatenate([meta, h], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.num_meta_tokens), jnp.float32), mask], axis=1)
+    return h, mask
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], *,
+            moe_impl: str = "dense", remat: bool = False) -> jnp.ndarray:
+    """Full-sequence logits: (B, S_total, Kcb, Vp)."""
+    h, _ = _frontend(cfg, params, batch)
+    h = L.hint(h, "dp", None, None)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    windows = _layer_windows(cfg)
+
+    def block(carry, inp):
+        lp, window = inp
+        out, _ = _block_prefill(cfg, carry, lp, window, positions,
+                                moe_impl=moe_impl, collect_cache=False)
+        return out, ()
+
+    if remat:
+        block = jax.checkpoint(block, prevent_cse=False,
+                               policy=_remat_policy())
+    h, _ = _scan(block, h, (params["layers"], windows))
+    return lm_logits(cfg, params, h)
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+                   *, moe_impl: str = "dense",
+                   remat: bool = False) -> jnp.ndarray:
+    """Final-normed hidden states (B, S_total, D) — no logits projection."""
+    h, _ = _frontend(cfg, params, batch)
+    h = L.hint(h, "dp", None, None)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    windows = _layer_windows(cfg)
+
+    def block(carry, inp):
+        lp, window = inp
+        out, _ = _block_prefill(cfg, carry, lp, window, positions,
+                                moe_impl=moe_impl, collect_cache=False)
+        return out, ()
+
+    if remat:
+        block = jax.checkpoint(block, prevent_cse=False,
+                               policy=_remat_policy())
+    h, _ = _scan(block, h, (params["layers"], windows))
+    return L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+CE_CHUNK = 512  # sequence-chunked cross entropy (keeps logits off HBM)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray], *,
+            moe_impl: str = "dense", remat: bool = True,
+            z_loss: float = 1e-4):
+    """Causal LM loss, padded-vocab masked, computed in sequence chunks so
+    the full (B, S, Vp) logits tensor never materializes (the checkpointed
+    chunk body recomputes its logits in the backward pass — the standard
+    fused-CE memory optimization).  Returns (loss, metrics)."""
+    hidden = forward_hidden(cfg, params, batch, moe_impl=moe_impl,
+                            remat=remat)
+    B, S_total, D = hidden.shape
+    labels = batch["labels"]  # (B, S) or (B, S, Kcb)
+    if labels.ndim == 2:
+        labels = labels[..., None]  # (B, S, 1)
+    S = labels.shape[1]
+    hidden = hidden[:, S_total - S:, :]  # frontend/meta positions: unlabeled
+    if cfg.tie_embeddings:
+        w = jnp.swapaxes(params["embed"], 1, 2)  # (Kcb, D, Vp)
+    else:
+        w = L.dense_w(params["head"])
+    Vp = w.shape[-1]
+    col_ok = jnp.arange(Vp) < cfg.vocab_size
+
+    def chunk_stats(h_chunk, lab_chunk):
+        # h_chunk: (B, ck, D); lab_chunk: (B, ck, Kcb)
+        logits = jnp.einsum("bsd,kdv->bskv",
+                            h_chunk, w.astype(h_chunk.dtype)
+                            ).astype(jnp.float32)
+        if cfg.final_logit_softcap:
+            logits = L.softcap(logits, cfg.final_logit_softcap)
+        logits = jnp.where(col_ok[None, None, None, :], logits, -1e9)
+        lse = jax.nn.logsumexp(logits, axis=-1)  # (B, ck, Kcb)
+        lab = jnp.take_along_axis(
+            logits, lab_chunk[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        correct = jnp.argmax(logits, -1) == lab_chunk
+        return (jnp.sum(lse - lab), jnp.sum(lse ** 2),
+                jnp.sum(correct.astype(jnp.float32)))
+
+    ck = min(CE_CHUNK, S)
+    n_chunks, rem = divmod(S, ck)
+    body = jax.checkpoint(
+        lambda carry, inp: (tuple(
+            c + s for c, s in zip(carry, chunk_stats(*inp))), ()),
+        prevent_cse=False)
+    hs = jnp.moveaxis(
+        hidden[:, :n_chunks * ck].reshape(B, n_chunks, ck, D), 1, 0)
+    ls = jnp.moveaxis(
+        labels[:, :n_chunks * ck].reshape(B, n_chunks, ck, -1), 1, 0)
+    zero = jnp.zeros((), jnp.float32)
+    (nll_sum, zsq_sum, acc_sum), _ = _scan(body, (zero, zero, zero),
+                                           (hs, ls))
+    if rem:
+        t = chunk_stats(hidden[:, n_chunks * ck:],
+                        labels[:, n_chunks * ck:])
+        nll_sum, zsq_sum, acc_sum = (nll_sum + t[0], zsq_sum + t[1],
+                                     acc_sum + t[2])
+    denom = float(B * S * labels.shape[-1])
+    nll = nll_sum / denom
+    loss = nll
+    if z_loss:
+        loss = loss + z_loss * zsq_sum / denom
+    metrics = {"loss": loss, "nll": nll, "accuracy": acc_sum / denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Prefill: run the full prompt, build the decode cache
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params, batch: Dict[str, jnp.ndarray],
+            max_len: int, *, moe_impl: str = "dense",
+            cache_dtype=jnp.bfloat16, quantize_cache: bool = False):
+    """Returns (last-token logits (B, Kcb, Vp), populated cache)."""
+    h, _ = _frontend(cfg, params, batch)
+    h = L.hint(h, "dp", None, None)
+    B, S = h.shape[0], h.shape[1]
+    positions = jnp.arange(S)
+    windows = _layer_windows(cfg)
+    T = max_len + cfg.cache_extra_tokens
+
+    def block(carry, inp):
+        lp, window = inp
+        out, new_cache = _block_prefill(
+            cfg, carry, lp, window, positions,
+            moe_impl=moe_impl, collect_cache=True)
+        emit = {}
+        if "k" in new_cache:
+            pad = T - S
+            if quantize_cache:
+                for nm in ("k", "v"):
+                    qv, sv = L.quantize_kv(new_cache[nm])
+                    emit[nm] = jnp.pad(
+                        qv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    emit[nm + "_scale"] = jnp.pad(
+                        sv, ((0, 0), (0, pad), (0, 0)))
+            else:
+                emit["k"] = jnp.pad(
+                    new_cache["k"], ((0, 0), (0, pad), (0, 0), (0, 0))
+                ).astype(cache_dtype)
+                emit["v"] = jnp.pad(
+                    new_cache["v"], ((0, 0), (0, pad), (0, 0), (0, 0))
+                ).astype(cache_dtype)
+        if "state" in new_cache:
+            emit["state"] = new_cache["state"]
+            emit["conv"] = new_cache["conv"].astype(cache_dtype)
+        return out, emit
+
+    h, emitted = _scan(block, h, (params["layers"], windows))
+    cache = dict(emitted)
+    cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    logits = lm_logits(cfg, params, h[:, -1:, :])[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token for every sequence in the batch
+# ---------------------------------------------------------------------------
+def decode_step(cfg: ModelConfig, params, cache: PyTree,
+                tokens: jnp.ndarray, *, moe_impl: str = "dense",
+                uniform_pos: bool = False):
+    """tokens: (B,) int32 or (B, Kcb).  Returns (logits (B, Kcb, Vp), cache)."""
+    if cfg.num_codebooks == 1:
+        tok = tokens[:, None]  # (B, 1)
+    else:
+        tok = tokens[:, None, :]  # (B, 1, Kcb)
+    h = embed_tokens(cfg, params, tok)  # (B, 1, D)
+    lengths = cache["lengths"]
+    windows = _layer_windows(cfg)
+    scan_cache = {k: v for k, v in cache.items() if k != "lengths"}
+
+    def block(carry, inp):
+        lp, window, cache_layer = inp
+        out, new_cache = _block_decode(
+            cfg, carry, lp, window, cache_layer, lengths, moe_impl=moe_impl,
+            uniform_pos=uniform_pos)
+        return out, new_cache
+
+    h, new_scan_cache = _scan(
+        block, h, (params["layers"], windows, scan_cache))
+    new_cache = dict(new_scan_cache)
+    quantized = "k_scale" in cache
+    if (uniform_pos or quantized) and "k" in new_cache:
+        # Deferred write: the scan emitted only the per-layer fresh k/v
+        # (L, B, KV, hd); commit them with one slice-write per cache.
+        pos = lengths[0]
+        names = (("k", "v", "k_scale", "v_scale") if quantized
+                 else ("k", "v"))
+        for name in names:
+            fresh = new_cache[name][:, :, None]  # (L, B, 1, KV[, hd])
+            start = (0, 0, pos) + (0,) * (fresh.ndim - 3)
+            new_cache[name] = lax.dynamic_update_slice(
+                scan_cache[name], fresh.astype(scan_cache[name].dtype),
+                start)
+    new_cache["lengths"] = lengths + 1
+    logits = lm_logits(cfg, params, h)[:, 0]  # (B, Kcb, Vp)
+    return logits, new_cache
+
+
+def greedy_token(cfg: ModelConfig, logits: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, Kcb, Vp) -> next token ids (B,) or (B, Kcb)."""
+    col = jnp.arange(logits.shape[-1])
+    masked = jnp.where(col < cfg.vocab_size, logits, -jnp.inf)
+    ids = jnp.argmax(masked, axis=-1).astype(jnp.int32)
+    return ids[:, 0] if cfg.num_codebooks == 1 else ids

@@ -1,0 +1,5 @@
+from repro.serving.batcher import Batch, Batcher, Request
+from repro.serving.server import MultiTenantServer, ServeResult, TenantRuntime
+
+__all__ = ["Batch", "Batcher", "Request", "MultiTenantServer",
+           "ServeResult", "TenantRuntime"]

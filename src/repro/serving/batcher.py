@@ -1,0 +1,62 @@
+"""Request batching for the multi-tenant server.
+
+Requests queue per tenant; a batching window groups same-tenant requests
+(padding prompts to a common length) so one prefill+decode serves many
+requests — the standard serving amortization, orthogonal to the paper's
+residency management but required for a real deployment.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    app: str
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 8
+    arrival_ms: float = 0.0
+    rid: int = field(default_factory=lambda: next(_ids))
+
+
+@dataclass
+class Batch:
+    app: str
+    requests: List[Request]
+    prompts: np.ndarray  # (B, S_max) right-aligned padded
+    max_new: int
+
+
+class Batcher:
+    def __init__(self, max_batch: int = 8, pad_id: int = 0):
+        self.queues: Dict[str, List[Request]] = defaultdict(list)
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+
+    def submit(self, req: Request) -> None:
+        self.queues[req.app].append(req)
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def next_batch(self) -> Optional[Batch]:
+        """Pop the largest same-tenant group (up to max_batch)."""
+        if not self.pending():
+            return None
+        app = max(self.queues, key=lambda a: len(self.queues[a]))
+        reqs = self.queues[app][: self.max_batch]
+        self.queues[app] = self.queues[app][self.max_batch:]
+        if not self.queues[app]:
+            del self.queues[app]
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.full((len(reqs), S), self.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            prompts[i, S - len(r.prompt):] = r.prompt  # right-align
+        return Batch(app, reqs, prompts, max(r.max_new for r in reqs))

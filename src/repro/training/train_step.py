@@ -1,0 +1,127 @@
+"""Training step factory: loss → grads → (optional compression) → AdamW.
+
+Features for the fleet: activation remat over the layer scan, microbatched
+gradient accumulation (pipelines the pod-axis all-reduce under XLA's
+latency-hiding scheduler), int8+error-feedback gradient compression, and a
+pure-pytree TrainState that checkpoints/reshards transparently.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import CompressionState, compress_grads
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training.optim import AdamW, AdamWState
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: AdamWState
+    comp: Optional[CompressionState]
+
+
+def init_state(cfg: ModelConfig, key, optimizer: AdamW,
+               dtype=jnp.float32, compression: bool = False) -> TrainState:
+    params = T.init_params(cfg, key, dtype)
+    comp = CompressionState.init(params) if compression else None
+    return TrainState(params, optimizer.init(params), comp)
+
+
+def abstract_state(cfg: ModelConfig, optimizer: AdamW, dtype=jnp.float32,
+                   compression: bool = False) -> TrainState:
+    return jax.eval_shape(
+        lambda: init_state(cfg, jax.random.key(0), optimizer, dtype,
+                           compression))
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    *,
+    moe_impl: str = "dense",
+    remat: bool = True,
+    grad_accum: int = 1,
+    compression: bool = False,
+    z_loss: float = 1e-4,
+    compute_dtype=jnp.bfloat16,
+    zero_specs=None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Mixed precision: parameters live in f32 (master copy, AdamW moments
+    f32); matrices are cast to ``compute_dtype`` for fwd/bwd, which also
+    halves the remat-saved activations.
+
+    ``zero_specs`` (a pytree of PartitionSpec matching params) turns on
+    ZeRO-2/FSDP behaviour under pjit: the bf16 compute copy and the
+    gradients are constrained to the data-sharded specs, so XLA keeps
+    them scattered and inserts per-use all-gathers / reduce-scatters.
+    Without it the 103B-param MoE tenant cannot fit f32 grads + a bf16
+    copy in a 16-wide TP slice (measured: 354% of HBM)."""
+
+    def _constrain(tree):
+        if zero_specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, zero_specs)
+
+    def cast(params):
+        if compute_dtype is None:
+            return params
+        out = jax.tree.map(
+            lambda p: p.astype(compute_dtype)
+            if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        return _constrain(out)
+
+    def loss_fn(params, batch):
+        return T.loss_fn(cfg, cast(params), batch, moe_impl=moe_impl,
+                         remat=remat, z_loss=z_loss)
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, _constrain(grads)
+
+        # Microbatch accumulation: scan over grad_accum slices of the batch.
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            g_acc, l_acc = carry
+            (loss, _), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = _constrain(jax.tree.map(jnp.add, g_acc, _constrain(g)))
+            return (g_acc, l_acc + loss), ()
+
+        zeros = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (g_sum, l_sum), _ = jax.lax.scan(
+            acc_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+        loss = l_sum / grad_accum
+        return loss, {"loss": loss}, grads
+
+    def train_step(state: TrainState, batch):
+        loss, metrics, grads = compute_grads(state.params, batch)
+        comp = state.comp
+        if compression:
+            grads, comp = compress_grads(grads, comp)
+        params, opt, opt_metrics = optimizer.update(
+            grads, state.opt, state.params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return TrainState(params, opt, comp), metrics
+
+    return train_step

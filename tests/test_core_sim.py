@@ -1,0 +1,132 @@
+"""Simulator, manager, and paper-claim validation tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.core import (EdgeMultiAI, generate_workload, simulate,
+                        sweep_policies)
+
+
+class TestWorkload:
+    def test_equal_requests_per_app(self):
+        wl = generate_workload(["a", "b", "c"], requests_per_app=20, seed=1)
+        counts = {}
+        for _, app in wl.requests:
+            counts[app] = counts.get(app, 0) + 1
+        assert all(c == 20 for c in counts.values())
+
+    def test_requests_sorted(self):
+        wl = generate_workload(["a", "b"], requests_per_app=30, seed=2)
+        ts = [t for t, _ in wl.requests]
+        assert ts == sorted(ts)
+
+    def test_deviation_increases_residuals(self):
+        lo = generate_workload(["a", "b"], deviation=0.1, seed=3,
+                               requests_per_app=100)
+        hi = generate_workload(["a", "b"], deviation=0.8, seed=3,
+                               requests_per_app=100)
+        assert hi.delta_D > lo.delta_D
+        assert hi.kl >= lo.kl * 0.5  # KL noisy but should not collapse
+
+    def test_dropped_predictions(self):
+        wl = generate_workload(["a"], deviation=0.9, seed=4,
+                               requests_per_app=200)
+        assert len(wl.predictions["a"]) < 200  # some were dropped
+
+
+class TestManagerAccounting:
+    def test_record_totals(self):
+        zoos = paper_zoos()
+        wl = generate_workload(list(zoos), requests_per_app=20, seed=0)
+        res = simulate(zoos, wl, policy="iws-bfe")
+        m = res.metrics
+        assert m.total == len(wl.requests)
+        assert abs(m.warm_ratio + m.cold_ratio + m.fail_ratio - 1.0) < 1e-9
+
+    def test_memory_never_exceeded(self):
+        # MemoryState.load asserts the invariant on every mutation, so a
+        # full simulation passing is itself the property.
+        zoos = paper_zoos()
+        for policy in ("none", "lfe", "bfe", "ws-bfe", "iws-bfe"):
+            wl = generate_workload(list(zoos), requests_per_app=30,
+                                   deviation=0.5, seed=7)
+            simulate(zoos, wl, policy=policy, budget_mb=900.0)
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(KeyError):
+            EdgeMultiAI(paper_zoos(), 1000.0, policy="nope")
+
+
+class TestPaperClaims:
+    """The paper's headline numbers (§IV), validated end-to-end."""
+
+    @pytest.fixture(scope="class")
+    def sweep(self):
+        return sweep_policies(
+            paper_zoos(), deviations=(0.3,),
+            policies=("none", "lfe", "bfe", "ws-bfe", "iws-bfe"),
+            seeds=(0, 1, 2), requests_per_app=50)
+
+    def test_warm_start_gain_over_no_policy(self, sweep):
+        """Claim: ≈60% more warm-starts than no-policy."""
+        gain = sweep["iws-bfe"][0.3]["warm"] / sweep["none"][0.3]["warm"]
+        assert gain > 1.5, f"warm-start gain {gain:.2f}"
+
+    def test_ws_policies_mitigate_cold_starts(self, sweep):
+        """Claim: WS-BFE / iWS-BFE cut cold starts ≥65% vs LFE/BFE."""
+        lfe_cold = sweep["lfe"][0.3]["cold"]
+        for p in ("ws-bfe", "iws-bfe"):
+            assert sweep[p][0.3]["cold"] < lfe_cold * 0.35, p
+
+    def test_iws_beats_ws_on_cold_starts(self, sweep):
+        """Claim: iWS-BFE ≈40% fewer cold-starts than WS-BFE."""
+        assert (sweep["iws-bfe"][0.3]["cold"]
+                <= sweep["ws-bfe"][0.3]["cold"])
+
+    def test_robustness_ordering(self, sweep):
+        """Fig 8 ordering: iws ≥ ws > lfe/bfe > none."""
+        r = {p: sweep[p][0.3]["rob"] for p in sweep}
+        assert r["iws-bfe"] >= r["ws-bfe"] - 0.02
+        assert r["ws-bfe"] > r["lfe"]
+        assert r["lfe"] > r["none"]
+
+    def test_lfe_bfe_accuracy_above_ws(self, sweep):
+        """Fig 6: LFE/BFE accuracy > WS-BFE (they never keep
+        low-precision models resident)."""
+        assert sweep["lfe"][0.3]["acc"] > sweep["ws-bfe"][0.3]["acc"]
+
+    def test_robustness_degrades_with_deviation(self):
+        out = sweep_policies(paper_zoos(), deviations=(0.0, 0.9),
+                             policies=("iws-bfe",), seeds=(0, 1))
+        assert out["iws-bfe"][0.0]["rob"] > out["iws-bfe"][0.9]["rob"]
+
+
+class TestFairness:
+    def test_no_app_starved(self):
+        """Figs 9/10: outcomes must not be biased to one application."""
+        zoos = paper_zoos()
+        wl = generate_workload(list(zoos), requests_per_app=60, seed=5,
+                               deviation=0.3)
+        res = simulate(zoos, wl, policy="iws-bfe")
+        per = res.metrics.per_app()
+        warms = [v["warm_ratio"] for v in per.values()]
+        assert min(warms) > 0.7, per
+        assert max(warms) - min(warms) < 0.3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.0, 0.9),
+       st.sampled_from(["lfe", "bfe", "ws-bfe", "iws-bfe"]))
+def test_simulation_total_invariants(seed, deviation, policy):
+    zoos = paper_zoos()
+    wl = generate_workload(list(zoos), requests_per_app=15,
+                           deviation=deviation, seed=seed)
+    res = simulate(zoos, wl, policy=policy)
+    m = res.metrics
+    assert m.total == len(wl.requests)
+    assert 0.0 <= m.warm_ratio <= 1.0
+    assert 0.0 <= m.robustness() <= 1.0
+    assert m.state.used_mb <= m.state.budget_mb + 1e-6
