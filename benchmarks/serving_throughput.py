@@ -1,5 +1,14 @@
-"""Serving-runtime microbenchmark: warm vs cold request latency through the
-real multi-tenant server (the system-level Table I analogue)."""
+"""Serving-engine benchmark: trace-driven multi-tenant throughput under
+memory contention (the system-level Table I analogue, now end-to-end).
+
+Drives the event-driven :class:`ServingEngine` through its asyncio entry
+point with a Poisson per-tenant trace (the simulator's arrival process),
+real prefill/decode on reduced configs, and KV caches charged against the
+Edge-MultiAI budget.  Reports requests/sec plus per-tenant p50/p95/p99.
+
+    PYTHONPATH=src python -m benchmarks.run serving_throughput
+"""
+import asyncio
 import time
 
 import jax
@@ -9,40 +18,48 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import MultiTenantServer
+from repro.serving import MultiTenantServer, kv_cache_mb, poisson_trace
 
 
 def run() -> None:
     srv = MultiTenantServer(budget_mb=1.2, policy="iws-bfe",
-                            delta_ms=500.0)
+                            delta_ms=500.0, max_batch=4,
+                            batch_window_ms=50.0)
     names = ["tinyllama-1.1b", "mamba2-780m"]
+    cfgs = {}
     for n in names:
         cfg = get_config(n, reduced=True)
+        cfgs[n] = cfg
         srv.register(n, cfg, T.init_params(cfg, jax.random.key(2),
                                            jnp.float32))
+    # Contended budget with KV headroom for a max-size batch of the most
+    # cache-hungry tenant.
+    kv = max(kv_cache_mb(c, srv.max_batch, 12 + 4) for c in cfgs.values())
+    srv.budget_mb = srv.contention_budget(kv)
     srv.start()
-    rng = np.random.default_rng(0)
-    now = 0.0
-    # alternate tenants under a budget that fits ~one model: every other
-    # request swaps models (cold); repeats on the same tenant are warm.
-    lat = {"warm": [], "cold": []}
-    for i in range(12):
-        n = names[(i // 3) % 2]  # 3 requests per tenant, then swap
-        cfg = get_config(n, reduced=True)
-        prompts = rng.integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
-        r = srv.serve(n, prompts, max_new=4, now_ms=now)
-        if not r.failed:
-            lat["warm" if r.warm else "cold"].append(r.latency_s)
-        now += 2000.0
-    s = srv.stats()
-    for kind, xs in lat.items():
-        if xs:
-            emit(f"serving/{kind}_latency",
-                 float(np.mean(xs)) * 1e6,
-                 f"n={len(xs)} mean={np.mean(xs) * 1e3:.1f}ms")
-    emit("serving/stats", 0.0,
-         f"warm_ratio={s['warm_ratio']:.2f} fail={s['fail_ratio']:.2f} "
-         f"resident={s['resident_mb']:.2f}MB")
+
+    trace, wl = poisson_trace(cfgs, requests_per_app=12,
+                              mean_iat_ms=1500.0, deviation=0.3,
+                              seed=0, max_new=4)
+    t0 = time.monotonic()
+    stats = asyncio.run(srv.engine.run_async(trace))
+    wall_s = time.monotonic() - t0
+    srv.engine.check_event_invariant()
+
+    emit("serving/requests_per_sec", stats.get("requests_per_sec", 0.0),
+         f"n={stats['requests']} wall={wall_s:.1f}s "
+         f"kv_rejections={stats['kv_rejections']} "
+         f"kv_downgrades={stats['kv_downgrades']}")
+    for app, s in stats["per_tenant"].items():
+        emit(f"serving/{app}/p50_ms", s["p50_ms"],
+             f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "
+             f"warm={s['warm_ratio']:.2f} fail={s['fail_ratio']:.2f} "
+             f"rps={s['throughput_rps']:.2f} "
+             f"mean_batch={s['mean_batch']:.1f}")
+    st = srv.manager.state
+    emit("serving/resident_mb", st.used_mb,
+         f"weights={st.weights_mb:.2f}MB kv={st.kv_mb:.2f}MB "
+         f"budget={st.budget_mb:.2f}MB")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
-"""End-to-end driver: Edge-MultiAI serving REAL models under a device
-memory budget.
+"""End-to-end driver: the event-driven serving engine running REAL models
+under a device memory budget.
 
 Three LM architectures (reduced configs) are registered as tenants; each
 gets a real zoo (bf16 + int8 weight variants built by repro.quant).  A
-bursty request trace drives the server: the iWS-BFE policy decides which
-variant of which tenant stays resident; int8 variants are served through
-the fused dequant matmul path; RNN predictors learn each tenant's cadence
-and trigger proactive loads.
+Poisson per-tenant trace (the simulator's arrival process) drives the
+engine: the iWS-BFE policy decides which variant of which tenant stays
+resident, every admitted batch's KV cache is charged against the same
+budget, int8 variants run through the fused dequant matmul path, and RNN
+predictors learn each tenant's cadence and trigger proactive loads.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -16,12 +17,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import Batcher, MultiTenantServer, Request
+from repro.serving import MultiTenantServer, kv_cache_mb, poisson_trace
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 
 server = MultiTenantServer(budget_mb=1e9, policy="iws-bfe",
-                           delta_ms=1500.0)
+                           delta_ms=1500.0, max_batch=4,
+                           batch_window_ms=100.0)
 cfgs = {}
 for name in TENANTS:
     cfg = get_config(name, reduced=True)
@@ -32,35 +34,32 @@ for name in TENANTS:
     zoo = server.tenants[name].zoo
     print(f"tenant {name:16s} zoo: " + "  ".join(
         f"{v.bits}bit={v.size_mb:.2f}MB" for v in zoo.variants))
-small = sum(t.zoo.smallest.size_mb for t in server.tenants.values())
-room = max(t.zoo.largest.size_mb - t.zoo.smallest.size_mb
-           for t in server.tenants.values())
-server.budget_mb = (small + room) * 1.05  # all-int8 + one bf16 upgrade
+kv = max(kv_cache_mb(c, server.max_batch, 12 + 6) for c in cfgs.values())
+server.budget_mb = server.contention_budget(kv)
 server.start()
 print(f"budget: {server.budget_mb:.2f} MB — forces contention\n")
 
-rng = np.random.default_rng(0)
-batcher = Batcher(max_batch=4)
-now = 0.0
-for i in range(24):
-    # bursty trace: tenants take turns issuing small bursts
-    name = TENANTS[(i // 4) % len(TENANTS)]
-    cfg = cfgs[name]
-    plen = int(rng.integers(4, 10))
-    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
-    batcher.submit(Request(app=name, prompt=prompt, max_new=6,
-                           arrival_ms=now))
-    now += float(rng.exponential(400.0))
-    if batcher.pending() >= 4 or i == 23:
-        while (b := batcher.next_batch()) is not None:
-            server.predict_and_preload(now)
-            r = server.serve(b.app, b.prompts, b.max_new, now_ms=now)
-            status = ("FAIL" if r.failed
-                      else ("warm" if r.warm else "COLD"))
-            print(f"[{now:7.0f}ms] {b.app:16s} batch={len(b.requests)} "
-                  f"{status:4s} bits={r.bits} "
-                  f"tokens={r.tokens[0][:4].tolist()}... "
-                  f"lat={r.latency_s * 1e3:6.0f}ms "
-                  f"resident={server.manager.state.used_mb:.2f}MB")
+trace, wl = poisson_trace(cfgs, requests_per_app=8, mean_iat_ms=800.0,
+                          deviation=0.3, seed=0, max_new=6)
+print(f"trace: {len(trace)} requests over {wl.horizon_ms / 1e3:.1f}s "
+      f"(virtual), KL={wl.kl:.3f}\n")
+stats = server.engine.run_trace(trace)
+server.engine.check_event_invariant()
 
-print("\nfinal stats:", server.stats())
+for ev in server.engine.events:
+    if ev.kind in ("admit", "reject"):
+        print(f"[{ev.t_ms:8.0f}ms] {ev.kind:6s} {ev.app:16s} "
+              f"kv={ev.kv_mb:5.3f}MB used={ev.used_mb:5.2f}MB "
+              f"free={ev.free_mb:5.2f}MB")
+
+print(f"\nthroughput: {stats.get('requests_per_sec', 0.0):.2f} req/s   "
+      f"kv_rejections={stats['kv_rejections']} "
+      f"kv_downgrades={stats['kv_downgrades']}")
+for app, s in stats["per_tenant"].items():
+    print(f"  {app:16s} n={s['requests']:3d} warm={s['warm_ratio']:.2f} "
+          f"fail={s['fail_ratio']:.2f} p50={s['p50_ms']:7.0f}ms "
+          f"p95={s['p95_ms']:7.0f}ms p99={s['p99_ms']:7.0f}ms "
+          f"batch={s['mean_batch']:.1f}")
+st = server.manager.state
+print(f"final residency: weights={st.weights_mb:.2f}MB kv={st.kv_mb:.2f}MB "
+      f"of {st.budget_mb:.2f}MB")

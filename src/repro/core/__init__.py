@@ -5,18 +5,19 @@ eviction policies (LFE / BFE / WS-BFE / iWS-BFE) → manager (predictors +
 memory optimizer + loader) → E2C-style simulator for the paper's
 evaluation protocol.
 """
-from repro.core.manager import EdgeMultiAI, InferenceRecord, Metrics
+from repro.core.manager import (BatchAdmission, EdgeMultiAI,
+                                InferenceRecord, Metrics)
 from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo, zoo_from_config
-from repro.core.policies import POLICIES, ProcurePlan
+from repro.core.policies import POLICIES, ProcurePlan, kv_headroom_plan
 from repro.core.predictor import MemoryPredictor, RequestPredictor
 from repro.core.simulator import (SimResult, Workload, generate_workload,
                                   simulate, sweep_policies)
 
 __all__ = [
-    "EdgeMultiAI", "InferenceRecord", "Metrics", "MemoryState",
-    "TenantState", "ModelVariant", "ModelZoo", "zoo_from_config",
-    "POLICIES", "ProcurePlan", "MemoryPredictor", "RequestPredictor",
-    "SimResult", "Workload", "generate_workload", "simulate",
-    "sweep_policies",
+    "BatchAdmission", "EdgeMultiAI", "InferenceRecord", "Metrics",
+    "MemoryState", "TenantState", "ModelVariant", "ModelZoo",
+    "zoo_from_config", "POLICIES", "ProcurePlan", "kv_headroom_plan",
+    "MemoryPredictor", "RequestPredictor", "SimResult", "Workload",
+    "generate_workload", "simulate", "sweep_policies",
 ]

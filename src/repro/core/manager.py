@@ -18,12 +18,26 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.memory_state import INF, MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
-from repro.core.policies import POLICIES, ProcurePlan
+from repro.core.policies import POLICIES, ProcurePlan, kv_headroom_plan
 
 # Inference time is load_ms/12 by default: the 8–17× load/infer asymmetry
 # measured in the paper's Table I (midpoint), which is what makes
 # cold-starts catastrophic and this whole framework worthwhile.
 LOAD_OVER_INFER = 12.0
+
+
+@dataclass
+class BatchAdmission:
+    """Outcome of admitting one serving batch: weights resident (possibly
+    after procurement) *and* its KV cache charged against the budget."""
+    app: str
+    t: float
+    kv_mb: float  # charged KV MB (0 when failed)
+    warm: bool
+    failed: bool
+    bits: Optional[int]
+    self_downgraded: bool = False  # requester shrank to fit its own cache
+    kv_rejected: bool = False  # failed specifically for cache pressure
 
 
 @dataclass
@@ -59,6 +73,7 @@ class EdgeMultiAI:
         self.delta = delta_ms
         self.history = history_ms
         self.records: List[InferenceRecord] = []
+        self.kv_rejections = 0  # batches rejected for KV pressure
         self._loader = loader  # real weight mover (serving runtime)
 
     # ------------------------------------------------------------------
@@ -144,6 +159,79 @@ class EdgeMultiAI:
             latency_ms=latency)
         self.records.append(rec)
         return rec
+
+    # ------------------------------------------------------------------
+    # KV-cache residency (serving runtime): batches charge their decode
+    # caches against the same budget the eviction policies manage.
+    # ------------------------------------------------------------------
+    def admit_batch(self, app: str, now: float, kv_mb: float
+                    ) -> BatchAdmission:
+        """Admit one batch: ensure weights are resident (procuring if
+        needed), then charge ``kv_mb`` of cache.  The KV need is staged as
+        a pending planning charge during procurement so the policies pick
+        a variant that leaves room for the cache up front (one weight
+        transfer, no load-then-downgrade thrash).  If pressure remains
+        (e.g. the tenant was already warm at a large variant), scavenge
+        victims' weight memory, then downgrade the requester itself; if
+        the cache still cannot fit, the batch is rejected and counted —
+        never an invariant assert."""
+        t = self.state.tenants[app]
+        self.state.pending_mb += kv_mb
+        try:
+            rec = self.on_request(app, now)
+        finally:
+            self.state.pending_mb -= kv_mb
+        if rec.failed:
+            # Attribute the failure: if weights alone would have been
+            # procurable without the staged KV need, this is cache
+            # pressure, not weight capacity.
+            if self.policy_name == "none":
+                kv_rej = self.state.free_mb >= t.zoo.largest.size_mb
+            else:
+                kv_rej = kv_mb > 0 and self._procure(app, now).ok
+            if kv_rej:
+                self.kv_rejections += 1
+            return BatchAdmission(app, now, 0.0, rec.warm, True, None,
+                                  kv_rejected=kv_rej)
+        if self.state.free_mb < kv_mb and self.policy_name != "none":
+            for ev in kv_headroom_plan(self.state, app, now, kv_mb,
+                                       delta=self.delta,
+                                       history=self.history):
+                self.state.load(ev.app, ev.new)
+                if self._loader:
+                    self._loader(ev.app, ev.new)
+        self_downgraded = False
+        while (self.policy_name != "none" and self.state.free_mb < kv_mb
+               and (nxt := t.zoo.next_smaller(t.loaded)) is not None):
+            self.state.load(app, nxt)
+            if self._loader:
+                self._loader(app, nxt)
+            self_downgraded = True
+        if self.state.free_mb < kv_mb:
+            self.kv_rejections += 1
+            # The inference never executes: retract the success record
+            # on_request logged so Metrics agree with the engine (a
+            # rejected request is neither warm nor served).
+            rec.warm, rec.failed, rec.bits = False, True, None
+            rec.accuracy, rec.latency_ms = 0.0, math.inf
+            return BatchAdmission(app, now, 0.0, False, True, None,
+                                  self_downgraded, kv_rejected=True)
+        # Scavenging/self-downgrade may have swapped the serving variant
+        # after on_request recorded it: sync the record to what actually
+        # serves so Metrics report the right bits/accuracy.
+        final = t.loaded
+        if rec.bits != final.bits:
+            rec.bits, rec.accuracy = final.bits, final.accuracy
+            rec.latency_ms = (
+                final.load_ms / LOAD_OVER_INFER if rec.warm
+                else final.load_ms + final.load_ms / LOAD_OVER_INFER)
+        self.state.reserve_kv(app, kv_mb)
+        return BatchAdmission(app, now, kv_mb, rec.warm, False,
+                              final.bits, self_downgraded)
+
+    def release_kv(self, app: str, kv_mb: float) -> None:
+        """A batch retired: return its cache memory to the pool."""
+        self.state.release_kv(app, kv_mb)
 
     # ------------------------------------------------------------------
     def metrics(self) -> "Metrics":

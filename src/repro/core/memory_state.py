@@ -1,5 +1,9 @@
-"""Memory tier state (§III-A "Memory Tier"): tracks loaded variants, free
-space, and per-tenant request/prediction bookkeeping.
+"""Memory tier state (§III-A "Memory Tier"): tracks loaded variants, live
+KV-cache charges, free space, and per-tenant request/prediction bookkeeping.
+
+``used_mb`` counts weights *and* per-tenant KV caches: admission and
+eviction decisions see runtime memory, not just model residency, so a
+tenant mid-decode cannot be silently overcommitted by a procurement.
 
 This is deliberately a plain-Python, side-effect-free data layer so the
 eviction policies are pure functions over it — which is what lets the
@@ -22,6 +26,7 @@ INF = math.inf
 class TenantState:
     zoo: ModelZoo
     loaded: Optional[ModelVariant] = None
+    kv_mb: float = 0.0  # live KV/decode-cache MB charged to this tenant
     last_request: float = -INF  # time of most recent actual request
     predicted_next: float = INF  # next predicted request time (INF = none)
     requests: int = 0
@@ -39,15 +44,29 @@ class TenantState:
 class MemoryState:
     budget_mb: float
     tenants: Dict[str, TenantState] = field(default_factory=dict)
+    # Transient planning charge: an admission-in-flight's KV need.  It is
+    # subtracted from free_mb so procure policies pick variants that leave
+    # room for the cache, but excluded from used_mb/check_invariant — it
+    # is a reservation *request*, not committed memory.
+    pending_mb: float = 0.0
 
     @property
-    def used_mb(self) -> float:
+    def weights_mb(self) -> float:
         return sum(t.loaded.size_mb for t in self.tenants.values()
                    if t.loaded is not None)
 
     @property
+    def kv_mb(self) -> float:
+        return sum(t.kv_mb for t in self.tenants.values())
+
+    @property
+    def used_mb(self) -> float:
+        """Weights + live KV caches: *runtime* memory, not just weights."""
+        return self.weights_mb + self.kv_mb
+
+    @property
     def free_mb(self) -> float:
-        return self.budget_mb - self.used_mb
+        return self.budget_mb - self.used_mb - self.pending_mb
 
     def loaded_variant(self, app: str) -> Optional[ModelVariant]:
         return self.tenants[app].loaded
@@ -62,6 +81,20 @@ class MemoryState:
     def load(self, app: str, variant: Optional[ModelVariant]) -> None:
         self.tenants[app].loaded = variant
         self.check_invariant()
+
+    def reserve_kv(self, app: str, mb: float) -> None:
+        """Charge a batch's KV cache to the tenant.  Callers must verify
+        ``free_mb >= mb`` first — an over-budget admit is an admission
+        decision (downgrade / reject), never an invariant violation."""
+        if mb < 0:
+            raise ValueError(f"negative KV reservation: {mb}")
+        self.tenants[app].kv_mb += mb
+        self.check_invariant()
+
+    def release_kv(self, app: str, mb: float) -> None:
+        """Return a retired batch's KV memory to the pool."""
+        t = self.tenants[app]
+        t.kv_mb = max(0.0, t.kv_mb - mb)
 
     def in_window(self, app: str, now: float, delta: float,
                   theta: float = 0.0) -> bool:

@@ -147,26 +147,37 @@ def _downgrade_candidates(state: MemoryState, app: str, now: float,
     return out
 
 
+def _scavenge_best_fit(state: MemoryState, cands: List[str],
+                       shortfall: Callable[[List[Eviction]], float]
+                       ) -> List[Eviction]:
+    """Greedy best-fit downgrade selection shared by WS-BFE and the KV
+    headroom path: pick the victim whose scavengeable size (loaded −
+    smallest) covers the remaining ``shortfall`` with least waste — or
+    the largest available when none covers — until the shortfall is met
+    or candidates run out."""
+    def scavengeable(a: str) -> float:
+        t = state.tenants[a]
+        return t.loaded.size_mb - t.zoo.smallest.size_mb
+
+    remaining = list(cands)
+    evictions: List[Eviction] = []
+    while (need := shortfall(evictions)) > 0 and remaining:
+        covering = [a for a in remaining if scavengeable(a) >= need]
+        pick = (min(covering, key=scavengeable) if covering
+                else max(remaining, key=scavengeable))
+        remaining.remove(pick)
+        t = state.tenants[pick]
+        evictions.append(Eviction(pick, t.loaded, t.zoo.smallest))
+    return evictions
+
+
 def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
            history: float = 0.0) -> ProcurePlan:
     cands = _downgrade_candidates(state, app, now, delta)
     for variant in state.tenants[app].zoo.variants:
-        evictions: List[Eviction] = []
-        remaining = list(cands)
-        while (_free_after(state, app, evictions) < variant.size_mb
-               and remaining):
-            need = variant.size_mb - _free_after(state, app, evictions)
-
-            def scavengeable(a: str) -> float:
-                t = state.tenants[a]
-                return t.loaded.size_mb - t.zoo.smallest.size_mb
-
-            covering = [a for a in remaining if scavengeable(a) >= need]
-            pick = (min(covering, key=scavengeable) if covering
-                    else max(remaining, key=scavengeable))
-            remaining.remove(pick)
-            t = state.tenants[pick]
-            evictions.append(Eviction(pick, t.loaded, t.zoo.smallest))
+        evictions = _scavenge_best_fit(
+            state, cands,
+            lambda evs: variant.size_mb - _free_after(state, app, evs))
         if _free_after(state, app, evictions) >= variant.size_mb:
             return ProcurePlan(app, variant, tuple(evictions))
         # §III-B-1 "high inference demand" fallback: fully unload the
@@ -220,6 +231,28 @@ def iws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
             return ProcurePlan(app, variant, tuple(evictions))
         # Step 17–18: retry with next smaller model.
     return ProcurePlan(app, None)  # Step 17: inference request fails
+
+
+# ---------------------------------------------------------------------------
+# KV-cache headroom (serving runtime): scavenge weight memory for caches
+# ---------------------------------------------------------------------------
+def kv_headroom_plan(state: MemoryState, app: str, now: float,
+                     need_mb: float, *, delta: float,
+                     history: float = 0.0) -> Tuple[Eviction, ...]:
+    """Free ≥ ``need_mb`` of headroom for ``app``'s KV cache by downgrading
+    minimalist victims to their smallest variant (same candidate filters as
+    iWS-BFE: window-overlap and LRU-K history exempt), best-fit first.
+
+    Unlike the procure policies this never touches the requester's own
+    variant — the caller decides whether to self-downgrade if scavenging
+    victims is not enough.  The returned evictions may be insufficient;
+    the caller re-checks ``free_mb`` after enacting.
+    """
+    cands = _downgrade_candidates(state, app, now, delta,
+                                  require_history=history)
+    return tuple(_scavenge_best_fit(
+        state, cands,
+        lambda evs: need_mb - state.free_mb - sum(e.freed_mb for e in evs)))
 
 
 POLICIES: Dict[str, Callable[..., ProcurePlan]] = {

@@ -198,7 +198,8 @@ def sweep_policies(
     delta_ms = calib.delta(1.0)
     for d in deviations:
         for p in policies:
-            agg = {"cold": [], "warm": [], "fail": [], "acc": [], "rob": []}
+            agg = {"cold": [], "warm": [], "fail": [], "acc": [],
+                   "rob": [], "kl": []}
             for s in seeds:
                 wl = generate_workload(
                     apps, requests_per_app=requests_per_app,
@@ -211,6 +212,6 @@ def sweep_policies(
                 agg["fail"].append(m.fail_ratio)
                 agg["acc"].append(m.mean_accuracy())
                 agg["rob"].append(m.robustness())
+                agg["kl"].append(wl.kl)
             out[p][d] = {k: float(np.mean(v)) for k, v in agg.items()}
-            out[p][d]["kl"] = wl.kl
     return out

@@ -1,5 +1,10 @@
 from repro.serving.batcher import Batch, Batcher, Request
+from repro.serving.engine import (EngineEvent, RequestResult, ServingEngine,
+                                  kv_cache_mb, poisson_trace,
+                                  trace_from_workload)
 from repro.serving.server import MultiTenantServer, ServeResult, TenantRuntime
 
 __all__ = ["Batch", "Batcher", "Request", "MultiTenantServer",
-           "ServeResult", "TenantRuntime"]
+           "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
+           "EngineEvent", "kv_cache_mb", "poisson_trace",
+           "trace_from_workload"]

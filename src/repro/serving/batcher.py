@@ -47,10 +47,15 @@ class Batcher:
         return sum(len(q) for q in self.queues.values())
 
     def next_batch(self) -> Optional[Batch]:
-        """Pop the largest same-tenant group (up to max_batch)."""
+        """Pop the largest same-tenant group (up to max_batch), FIFO
+        within the tenant; queue-size ties go to the tenant whose head
+        request has waited longest (no starvation under equal load)."""
         if not self.pending():
             return None
-        app = max(self.queues, key=lambda a: len(self.queues[a]))
+        app = max(self.queues,
+                  key=lambda a: (len(self.queues[a]),
+                                 -self.queues[a][0].arrival_ms,
+                                 -self.queues[a][0].rid))
         reqs = self.queues[app][: self.max_batch]
         self.queues[app] = self.queues[app][self.max_batch:]
         if not self.queues[app]:

@@ -1,0 +1,311 @@
+"""Event-driven multi-tenant serving engine with KV-cache residency.
+
+The seed server handled one request at a time and its decode caches were
+invisible to the Edge-MultiAI budget.  This engine closes both gaps:
+
+* **admit → (maybe load/evict) → prefill → decode → retire** as a
+  continuous loop pulled from the :class:`~repro.serving.batcher.Batcher`
+  (largest-queue-first across tenants, FIFO within a tenant);
+* every admitted batch's KV cache is sized from the real decode-cache
+  pytree (``transformer.abstract_cache``) and charged to the tenant via
+  ``EdgeMultiAI.admit_batch`` — so ``MemoryState.free_mb``, the eviction
+  policies, and iWS-BFE procurement all see weights **plus** caches; the
+  charge is released when the batch retires;
+* a trace-driven load generator reuses the simulator's Poisson
+  per-tenant arrivals (``generate_workload``) so the same workloads that
+  drive the paper evaluation drive the real models;
+* per-tenant latency percentiles and throughput come out of ``stats()``.
+
+Time is virtual (milliseconds, like the simulator) so runs are
+reproducible; batch *service* time is the measured wall clock of the real
+prefill+decode, folded back into the virtual clock.  ``run_async`` wraps
+the loop for asyncio callers.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.manager import BatchAdmission
+from repro.core.simulator import Workload, generate_workload
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.batcher import Batch, Batcher, Request
+
+MB = 1024 * 1024
+
+
+@functools.lru_cache(maxsize=1024)
+def kv_cache_mb(cfg: ModelConfig, batch: int, max_len: int,
+                quantized: bool = False) -> float:
+    """Exact decode-cache footprint in MB, from the abstract cache pytree
+    (no allocation) — the same shapes ``prefill`` will materialize.
+    Memoized: admission sits on the serving hot path and batch shapes
+    repeat (ModelConfig is frozen/hashable)."""
+    leaves = jax.tree.leaves(
+        T.abstract_cache(cfg, batch, max_len, quantized=quantized))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in leaves) / MB
+
+
+@dataclass
+class RequestResult:
+    """Per-request outcome with queueing + service latency."""
+    rid: int
+    app: str
+    arrival_ms: float
+    start_ms: float
+    done_ms: float
+    warm: bool
+    failed: bool
+    bits: Optional[int]
+    batch_size: int
+    kv_mb: float
+
+    @property
+    def latency_ms(self) -> float:
+        return self.done_ms - self.arrival_ms
+
+
+@dataclass
+class EngineEvent:
+    """Audit-trail entry emitted at every engine state change; the
+    invariant tests replay these to check ``used_mb ≤ budget_mb`` at
+    every point in the run, not just at the end."""
+    t_ms: float
+    kind: str  # submit | admit | reject | retire
+    app: str
+    kv_mb: float
+    used_mb: float
+    free_mb: float
+
+
+Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
+
+
+def _default_executor(runtime, batch: Batch,
+                      extra: Optional[dict] = None) -> np.ndarray:
+    return runtime.generate(batch.prompts, batch.max_new, extra)
+
+
+class ServingEngine:
+    """Pulls batches from the Batcher and drives them through the
+    Edge-MultiAI manager with full runtime-memory accounting.
+
+    ``executor`` is injectable so accounting/invariant tests can run the
+    full admit/retire protocol without touching XLA.
+    """
+
+    def __init__(self, server, *, max_batch: int = 8,
+                 batch_window_ms: float = 0.0,
+                 executor: Optional[Executor] = None):
+        self.server = server
+        self.batcher = Batcher(max_batch=max_batch)
+        self.max_batch = max_batch
+        self.batch_window_ms = batch_window_ms
+        self.results: List[RequestResult] = []
+        self.events: List[EngineEvent] = []
+        self.kv_downgrades = 0  # requester shrank itself to fit its cache
+        self.weight_failures = 0  # batches whose weights were unprocurable
+        self._executor = executor or _default_executor
+
+    @property
+    def kv_rejections(self) -> int:
+        """Batches bounced for cache pressure — the manager's counter is
+        the single source of truth (it performs the rejection)."""
+        mgr = self.server.manager
+        return mgr.kv_rejections if mgr else 0
+
+    # ------------------------------------------------------------------
+    def _event(self, t_ms: float, kind: str, app: str, kv_mb: float) -> None:
+        st = self.server.manager.state
+        self.events.append(EngineEvent(
+            t_ms, kind, app, kv_mb, st.used_mb, st.free_mb))
+
+    def submit(self, req: Request, now_ms: float) -> None:
+        """Enqueue a request; feeds the tenant's RNN arrival predictor."""
+        req.arrival_ms = now_ms if req.arrival_ms == 0.0 else req.arrival_ms
+        self.server.tenants[req.app].predictor.observe_request(
+            req.arrival_ms)
+        self.batcher.submit(req)
+        self._event(req.arrival_ms, "submit", req.app, 0.0)
+
+    # ------------------------------------------------------------------
+    def execute_batch(self, batch: Batch, now_ms: float,
+                      extra: Optional[dict] = None
+                      ) -> Tuple[List[RequestResult], float,
+                                 Optional[np.ndarray]]:
+        """One admit→(load/evict)→prefill→decode→retire cycle.
+
+        Returns the per-request results, the measured service time in ms
+        (wall clock of the real model execution), and the generated
+        tokens (None when the batch was rejected).
+        """
+        mgr = self.server.manager
+        assert mgr is not None, "server.start() before engine use"
+        tr = self.server.tenants[batch.app]
+        total_len = batch.prompts.shape[1] + batch.max_new
+        kv_mb = kv_cache_mb(tr.cfg, len(batch.requests), total_len)
+        adm: BatchAdmission = mgr.admit_batch(batch.app, now_ms, kv_mb)
+        if adm.self_downgraded:
+            self.kv_downgrades += 1
+        if adm.failed:
+            if not adm.kv_rejected:
+                self.weight_failures += 1
+            self._event(now_ms, "reject", batch.app, kv_mb)
+            # A rejected request was never served: not warm, failed.
+            results = [
+                RequestResult(r.rid, batch.app, r.arrival_ms, now_ms,
+                              now_ms, False, True, None,
+                              len(batch.requests), 0.0)
+                for r in batch.requests]
+            self.results.extend(results)
+            return results, 0.0, None
+        self._event(now_ms, "admit", batch.app, adm.kv_mb)
+        t0 = time.monotonic()
+        try:
+            tokens = self._executor(tr, batch, extra)
+        except BaseException:
+            # Execution crashed (XLA OOM, bad inputs): release the cache
+            # charge so it doesn't leak, balance the audit trail, and
+            # record the requests as failed so callers that catch the
+            # exception and keep serving don't lose them from stats.
+            service_ms = (time.monotonic() - t0) * 1e3
+            done_ms = now_ms + service_ms
+            mgr.release_kv(batch.app, adm.kv_mb)
+            self._event(done_ms, "retire", batch.app, -adm.kv_mb)
+            self.results.extend(
+                RequestResult(r.rid, batch.app, r.arrival_ms, now_ms,
+                              done_ms, False, True, None,
+                              len(batch.requests), 0.0)
+                for r in batch.requests)
+            raise
+        service_ms = (time.monotonic() - t0) * 1e3
+        done_ms = now_ms + service_ms
+        mgr.release_kv(batch.app, adm.kv_mb)
+        self._event(done_ms, "retire", batch.app, -adm.kv_mb)
+        results = [
+            RequestResult(r.rid, batch.app, r.arrival_ms, now_ms, done_ms,
+                          adm.warm, False, adm.bits, len(batch.requests),
+                          adm.kv_mb)
+            for r in batch.requests]
+        self.results.extend(results)
+        return results, service_ms, tokens
+
+    # ------------------------------------------------------------------
+    def run_trace(self, requests: Sequence[Request]) -> dict:
+        """Closed-loop trace replay: arrivals enter the batcher at their
+        trace timestamps; the single engine pulls the next batch whenever
+        it is idle, waiting out the batching window when the queue is
+        short and another arrival is imminent."""
+        pending = sorted(requests, key=lambda r: r.arrival_ms)
+        i, n, now = 0, len(pending), 0.0
+        while i < n or self.batcher.pending():
+            if not self.batcher.pending():
+                now = max(now, pending[i].arrival_ms)
+            while i < n and pending[i].arrival_ms <= now:
+                self.submit(pending[i], pending[i].arrival_ms)
+                i += 1
+            # Hold a short batch for an imminent arrival (amortization).
+            if (self.batcher.pending() < self.max_batch and i < n
+                    and pending[i].arrival_ms <= now + self.batch_window_ms):
+                now = pending[i].arrival_ms
+                continue
+            self.server.predict_and_preload(now)
+            batch = self.batcher.next_batch()
+            _, service_ms, _ = self.execute_batch(batch, now)
+            now += service_ms
+        return self.stats()
+
+    async def run_async(self, requests: Sequence[Request]) -> dict:
+        """Asyncio entry point: replays the trace off the event loop."""
+        return await asyncio.to_thread(self.run_trace, requests)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate + per-tenant latency percentiles and throughput."""
+        out: dict = {
+            "requests": len(self.results),
+            "kv_downgrades": self.kv_downgrades,
+            "kv_rejections": self.kv_rejections,
+            "weight_failures": self.weight_failures,
+            "per_tenant": {},
+        }
+        if not self.results:
+            return out
+        span_ms = (max(r.done_ms for r in self.results)
+                   - min(r.arrival_ms for r in self.results))
+        out["requests_per_sec"] = (
+            len(self.results) / (span_ms / 1e3) if span_ms > 0 else 0.0)
+        for app in sorted({r.app for r in self.results}):
+            rs = [r for r in self.results if r.app == app]
+            ok = [r.latency_ms for r in rs if not r.failed]
+            lat = (dict(zip(
+                ("p50_ms", "p95_ms", "p99_ms"),
+                (float(x) for x in np.percentile(ok, (50, 95, 99)))))
+                if ok else {"p50_ms": float("inf"),
+                            "p95_ms": float("inf"),
+                            "p99_ms": float("inf")})
+            t_span = (max(r.done_ms for r in rs)
+                      - min(r.arrival_ms for r in rs))
+            out["per_tenant"][app] = {
+                "requests": len(rs),
+                "warm_ratio": sum(r.warm for r in rs) / len(rs),
+                "fail_ratio": sum(r.failed for r in rs) / len(rs),
+                "mean_batch": float(np.mean([r.batch_size for r in rs])),
+                "throughput_rps": (len(rs) / (t_span / 1e3)
+                                   if t_span > 0 else 0.0),
+                **lat,
+            }
+        return out
+
+    def check_event_invariant(self, budget_mb: Optional[float] = None
+                              ) -> None:
+        """Every recorded event must respect the memory budget."""
+        budget = (budget_mb if budget_mb is not None
+                  else self.server.manager.state.budget_mb)
+        for ev in self.events:
+            if ev.used_mb > budget + 1e-6:
+                raise AssertionError(
+                    f"budget exceeded at t={ev.t_ms:.1f}ms "
+                    f"({ev.kind} {ev.app}): {ev.used_mb:.2f}MB "
+                    f"> {budget:.2f}MB")
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven load generation (reuses the simulator's arrival process)
+# ---------------------------------------------------------------------------
+def trace_from_workload(wl: Workload, cfgs: Dict[str, ModelConfig], *,
+                        seed: int = 0, prompt_len: Tuple[int, int] = (4, 12),
+                        max_new: int = 8) -> List[Request]:
+    """Materialize a simulator :class:`Workload` as real serving requests:
+    same Poisson per-tenant timestamps, random prompts per tenant vocab."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for t, app in wl.requests:
+        plen = int(rng.integers(*prompt_len))
+        prompt = rng.integers(
+            0, cfgs[app].vocab_size, plen).astype(np.int32)
+        reqs.append(Request(app=app, prompt=prompt, max_new=max_new,
+                            arrival_ms=t))
+    return reqs
+
+
+def poisson_trace(cfgs: Dict[str, ModelConfig], *,
+                  requests_per_app: int = 20,
+                  mean_iat_ms: float = 2000.0,
+                  deviation: float = 0.3,
+                  seed: int = 0,
+                  max_new: int = 8) -> Tuple[List[Request], Workload]:
+    """Convenience: generate_workload → requests, returning both so the
+    caller can feed predictions to the manager if desired."""
+    wl = generate_workload(list(cfgs), requests_per_app=requests_per_app,
+                           mean_iat_ms=mean_iat_ms, deviation=deviation,
+                           seed=seed)
+    return trace_from_workload(wl, cfgs, seed=seed, max_new=max_new), wl

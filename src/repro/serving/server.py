@@ -97,15 +97,24 @@ class TenantRuntime:
 
 
 class MultiTenantServer:
-    """The end-to-end system: Edge-MultiAI + real tenants + batching."""
+    """The end-to-end system: Edge-MultiAI + real tenants + batching.
+
+    Since the engine refactor this object is the *tenant registry and
+    facade*: ``serve()`` keeps its one-call API but delegates every
+    admit/execute/retire cycle to the :class:`ServingEngine`, which also
+    charges each batch's KV cache against the memory budget."""
 
     def __init__(self, budget_mb: float, policy: str = "iws-bfe",
-                 delta_ms: float = 500.0, straggler_deadline_s: float = 30.0):
+                 delta_ms: float = 500.0, straggler_deadline_s: float = 30.0,
+                 max_batch: int = 8, batch_window_ms: float = 0.0):
         self.tenants: Dict[str, TenantRuntime] = {}
         self.budget_mb = budget_mb
         self.policy = policy
         self.delta_ms = delta_ms
         self.manager: Optional[EdgeMultiAI] = None
+        self.engine = None  # type: Optional["ServingEngine"]
+        self.max_batch = max_batch
+        self.batch_window_ms = batch_window_ms
         self.straggler_deadline_s = straggler_deadline_s
         self.redispatch_count = 0
         self.results: List[ServeResult] = []
@@ -114,7 +123,20 @@ class MultiTenantServer:
                  precisions: Tuple[int, ...] = (16, 8)) -> None:
         self.tenants[name] = TenantRuntime(name, cfg, params, precisions)
 
+    def contention_budget(self, kv_headroom_mb: float = 0.0) -> float:
+        """Standard contended budget over the registered tenants: every
+        tenant resident at its smallest variant, plus room to upgrade the
+        widest zoo to full precision, 5% slack, and explicit headroom for
+        KV caches (which are charged against the budget too).  All-bf16
+        residency stays impossible."""
+        small = sum(t.zoo.smallest.size_mb for t in self.tenants.values())
+        room = max(t.zoo.largest.size_mb - t.zoo.smallest.size_mb
+                   for t in self.tenants.values())
+        return (small + room) * 1.05 + kv_headroom_mb
+
     def start(self) -> None:
+        from repro.serving.engine import ServingEngine
+
         zoos = {n: t.zoo for n, t in self.tenants.items()}
 
         def loader(app: str, variant: Optional[ModelVariant]) -> None:
@@ -123,6 +145,9 @@ class MultiTenantServer:
         self.manager = EdgeMultiAI(
             zoos, self.budget_mb, policy=self.policy,
             delta_ms=self.delta_ms, loader=loader)
+        self.engine = ServingEngine(
+            self, max_batch=self.max_batch,
+            batch_window_ms=self.batch_window_ms)
 
     # ------------------------------------------------------------------
     def predict_and_preload(self, now_ms: float) -> None:
@@ -137,18 +162,31 @@ class MultiTenantServer:
     def serve(self, app: str, prompts: np.ndarray, max_new: int = 8,
               now_ms: Optional[float] = None,
               extra: Optional[dict] = None) -> ServeResult:
+        """Synchronous one-batch API, delegating to the engine: the batch
+        is admitted with its KV cache charged against the budget and the
+        charge released on retirement."""
         assert self.manager is not None, "call start() first"
+        from repro.serving.batcher import Batch, Request
+
         now_ms = time.monotonic() * 1e3 if now_ms is None else now_ms
         tr = self.tenants[app]
-        tr.predictor.observe_request(now_ms)
-        rec = self.manager.on_request(app, now_ms)
-        t0 = time.monotonic()
-        if rec.failed:
+        prompts = np.asarray(prompts, np.int32)
+        if len(prompts) == 0:  # nothing to admit, nothing to charge
             return self._record(ServeResult(
-                app, np.zeros((len(prompts), 0), np.int32), rec.warm, True,
-                None, time.monotonic() - t0))
-        toks = tr.generate(prompts, max_new, extra)
-        elapsed = time.monotonic() - t0
+                app, np.zeros((0, max_new), np.int32), False, False,
+                tr.loaded_bits, 0.0))
+        tr.predictor.observe_request(now_ms)
+        reqs = [Request(app=app, prompt=prompts[i], max_new=max_new,
+                        arrival_ms=now_ms) for i in range(len(prompts))]
+        batch = Batch(app, reqs, prompts, max_new)
+        results, service_ms, toks = self.engine.execute_batch(
+            batch, now_ms, extra=extra)
+        warm = results[0].warm
+        if toks is None:
+            return self._record(ServeResult(
+                app, np.zeros((len(prompts), 0), np.int32), warm, True,
+                None, service_ms / 1e3))
+        elapsed = service_ms / 1e3
         redis = False
         if elapsed > self.straggler_deadline_s:
             # Straggler mitigation: on a real fleet this re-dispatches to
@@ -157,7 +195,7 @@ class MultiTenantServer:
             self.redispatch_count += 1
             redis = True
         return self._record(ServeResult(
-            app, toks, rec.warm, False, tr.loaded_bits, elapsed, redis))
+            app, toks, warm, False, tr.loaded_bits, elapsed, redis))
 
     def _record(self, r: ServeResult) -> ServeResult:
         self.results.append(r)
@@ -165,15 +203,32 @@ class MultiTenantServer:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
-        n = len(self.results)
-        if not n:
+        """Aggregate stats plus the engine's per-tenant latency
+        percentiles, throughput, and KV-pressure counters.  All request
+        counts are per *request* (the engine's unit), so the top-level
+        ratios and the per-tenant breakdown describe the same population
+        — a multi-row serve() batch counts once per row."""
+        eng_results = self.engine.results if self.engine else []
+        if not eng_results:  # serve() always routes through the engine
             return {}
-        return {
-            "requests": n,
-            "warm_ratio": sum(r.warm for r in self.results) / n,
-            "fail_ratio": sum(r.failed for r in self.results) / n,
-            "mean_latency_s": float(np.mean(
-                [r.latency_s for r in self.results if not r.failed])),
+        n = len(eng_results)
+        ok = [r.latency_ms for r in eng_results if not r.failed]
+        eng = self.engine.stats()
+        out = {
             "redispatched": self.redispatch_count,
             "resident_mb": self.manager.state.used_mb,
+            "weights_mb": self.manager.state.weights_mb,
+            "kv_mb": self.manager.state.kv_mb,
+            "requests": n,
+            "warm_ratio": sum(r.warm for r in eng_results) / n,
+            "fail_ratio": sum(r.failed for r in eng_results) / n,
+            "mean_latency_s": (float(np.mean(ok)) / 1e3 if ok
+                               else float("inf")),
+            "per_tenant": eng["per_tenant"],
+            "kv_downgrades": eng["kv_downgrades"],
+            "kv_rejections": eng["kv_rejections"],
+            "weight_failures": eng["weight_failures"],
         }
+        if "requests_per_sec" in eng:
+            out["requests_per_sec"] = eng["requests_per_sec"]
+        return out

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.predictor import RequestPredictor
 from repro.models import transformer as T
-from repro.serving import Batcher, MultiTenantServer, Request
+from repro.serving import Batcher, MultiTenantServer, Request, kv_cache_mb
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 
@@ -21,14 +21,11 @@ def server():
         params = T.init_params(
             cfg, jax.random.key(hash(name) % 2 ** 31), jnp.float32)
         srv.register(name, cfg, params)
-    # Budget relative to the real zoo sizes: roughly 1.3× the largest
-    # tenant — all-bf16 residency is impossible, all-int8 is possible.
-    # Feasible-contention budget: all tenants resident at int8 plus
-    # room to upgrade one to bf16 — but all-bf16 impossible.
-    small = sum(t.zoo.smallest.size_mb for t in srv.tenants.values())
-    room = max(t.zoo.largest.size_mb - t.zoo.smallest.size_mb
-               for t in srv.tenants.values())
-    srv.budget_mb = (small + room) * 1.05
+    # Feasible contention, with headroom for the largest decode cache
+    # these tests admit (batch 2, total length 10).
+    kv = max(kv_cache_mb(get_config(n, reduced=True), 2, 10)
+             for n in TENANTS)
+    srv.budget_mb = srv.contention_budget(kv)
     srv.start()
     return srv
 
@@ -43,6 +40,13 @@ def test_zoo_sizes_real(server):
 def test_budget_contention(server):
     total16 = sum(t.zoo.largest.size_mb for t in server.tenants.values())
     assert total16 > server.budget_mb, "budget must force contention"
+
+
+def test_serve_empty_prompts_no_crash(server):
+    r = server.serve(TENANTS[0], np.zeros((0, 4), np.int32), max_new=2,
+                     now_ms=0.0)
+    assert not r.failed
+    assert r.tokens.shape == (0, 2)
 
 
 def test_serve_generates_tokens(server):
@@ -80,6 +84,65 @@ def test_manager_accounting_matches_devices(server):
         else:
             assert t.device_params is not None
             assert t.loaded_bits == st.tenants[name].loaded.bits
+
+
+def test_batcher_right_aligned_padding():
+    b = Batcher(max_batch=4, pad_id=0)
+    lens = [2, 5, 3]
+    for i, n in enumerate(lens):
+        b.submit(Request(app="x",
+                         prompt=(10 * (i + 1)
+                                 + np.arange(n)).astype(np.int32)))
+    batch = b.next_batch()
+    assert batch.prompts.shape == (3, 5)
+    for i, n in enumerate(lens):
+        row = batch.prompts[i]
+        assert np.all(row[: 5 - n] == 0), "left side must be padding"
+        expect = (10 * (i + 1) + np.arange(n)).astype(np.int32)
+        assert np.array_equal(row[5 - n:], expect), "prompt right-aligned"
+
+
+def test_batcher_fifo_within_tenant():
+    b = Batcher(max_batch=8)
+    reqs = [Request(app="x", prompt=np.arange(3, dtype=np.int32))
+            for _ in range(5)]
+    for r in reqs:
+        b.submit(r)
+    batch = b.next_batch()
+    assert [r.rid for r in batch.requests] == [r.rid for r in reqs]
+
+
+def test_batcher_max_batch_splitting():
+    b = Batcher(max_batch=3)
+    for _ in range(7):
+        b.submit(Request(app="x", prompt=np.arange(4, dtype=np.int32)))
+    sizes = []
+    while (batch := b.next_batch()) is not None:
+        sizes.append(len(batch.requests))
+    assert sizes == [3, 3, 1]
+
+
+def test_batcher_largest_queue_first():
+    b = Batcher(max_batch=8)
+    for app, n in (("small", 2), ("big", 5), ("mid", 3)):
+        for _ in range(n):
+            b.submit(Request(app=app, prompt=np.arange(3, dtype=np.int32)))
+    assert b.next_batch().app == "big"
+    assert b.next_batch().app == "mid"
+    assert b.next_batch().app == "small"
+    assert b.next_batch() is None
+    assert b.pending() == 0
+
+
+def test_batcher_tie_break_oldest_head():
+    b = Batcher(max_batch=8)
+    b.submit(Request(app="late", prompt=np.arange(3, dtype=np.int32),
+                     arrival_ms=200.0))
+    b.submit(Request(app="early", prompt=np.arange(3, dtype=np.int32),
+                     arrival_ms=100.0))
+    # equal queue depth: the tenant whose head waited longest goes first
+    assert b.next_batch().app == "early"
+    assert b.next_batch().app == "late"
 
 
 def test_batcher_groups_and_pads():

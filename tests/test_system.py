@@ -9,7 +9,7 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.configs.paper_edge import paper_zoos
 from repro.core import generate_workload, simulate
 from repro.models import transformer as T
-from repro.serving import MultiTenantServer
+from repro.serving import MultiTenantServer, kv_cache_mb
 
 
 def test_public_api_importable():
@@ -44,12 +44,10 @@ def test_end_to_end_serving_with_predictors():
         cfg = get_config(n, reduced=True)
         srv.register(n, cfg, T.init_params(cfg, jax.random.key(1),
                                            jnp.float32))
-    # Feasible-contention budget: all tenants resident at int8 plus
-    # room to upgrade one to bf16 — but all-bf16 impossible.
-    small = sum(t.zoo.smallest.size_mb for t in srv.tenants.values())
-    room = max(t.zoo.largest.size_mb - t.zoo.smallest.size_mb
-               for t in srv.tenants.values())
-    srv.budget_mb = (small + room) * 1.05
+    # Feasible contention, with headroom for the largest per-request
+    # decode cache (max_new=2 on a 4-token prompt).
+    kv = max(kv_cache_mb(get_config(n, reduced=True), 1, 6) for n in names)
+    srv.budget_mb = srv.contention_budget(kv)
     srv.start()
     rng = np.random.default_rng(0)
     now = 0.0
