@@ -1,0 +1,91 @@
+"""CI benchmark gate: compare a ``benchmarks.run`` CSV against a
+committed baseline and fail on regressions beyond tolerance.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        bench.csv benchmarks/BENCH_serving_baseline.json
+
+The baseline JSON maps row names to::
+
+    {"value": <committed measurement>,
+     "min_ratio": 0.5,          # fail if measured < value * min_ratio
+     "min_delta": 0.1}          # fail if measured < value - min_delta
+
+Either bound may be omitted; when both are present the *looser* floor
+wins (ratios absorb machine-speed differences for wall-clock metrics,
+deltas suit bounded ratios like warm_ratio).  Rows in the baseline but
+missing from the CSV are hard failures — a silently dropped metric must
+not read as a pass.  Improvements never fail: the gate is one-sided, and
+the committed value should be refreshed deliberately, not ratcheted by
+CI noise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, Tuple
+
+
+def parse_csv(path: str) -> Dict[str, float]:
+    """``name,value,detail`` rows (the benchmarks.common.emit schema);
+    keeps the first occurrence of each name and skips the header plus
+    any interleaved non-CSV output."""
+    out: Dict[str, float] = {}
+    with open(path) as fh:
+        for line in fh:
+            parts = line.rstrip("\n").split(",", 2)
+            if len(parts) < 2 or parts[0] == "name":
+                continue
+            try:
+                value = float(parts[1])
+            except ValueError:
+                continue
+            out.setdefault(parts[0], value)
+    return out
+
+
+def floor_for(spec: dict) -> Tuple[float, str]:
+    """The pass/fail floor for one baseline entry (looser bound wins)."""
+    value = float(spec["value"])
+    floors = []
+    if "min_ratio" in spec:
+        floors.append((value * float(spec["min_ratio"]),
+                       f"{spec['min_ratio']}x of {value:g}"))
+    if "min_delta" in spec:
+        floors.append((value - float(spec["min_delta"]),
+                       f"{value:g} - {spec['min_delta']}"))
+    if not floors:
+        return value, f"{value:g} (exact floor)"
+    return min(floors, key=lambda f: f[0])
+
+
+def main(csv_path: str, baseline_path: str) -> int:
+    measured = parse_csv(csv_path)
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+    failures = []
+    for name, spec in baseline.items():
+        floor, how = floor_for(spec)
+        if name not in measured:
+            failures.append(f"{name}: missing from {csv_path}")
+            continue
+        got = measured[name]
+        status = "OK  " if got >= floor else "FAIL"
+        print(f"{status} {name}: measured={got:g} floor={floor:g} ({how})")
+        if got < floor:
+            failures.append(
+                f"{name}: {got:g} < floor {floor:g} ({how})")
+    if failures:
+        print("\nbenchmark regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nbenchmark regression gate passed "
+          f"({len(baseline)} metrics checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        sys.exit("usage: python -m benchmarks.check_regression "
+                 "<bench.csv> <baseline.json>")
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -7,7 +7,9 @@ ROWS = []
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.1f},{derived}")
+    # %.6g keeps ratios (warm_ratio 0.917) and micro-latencies exact
+    # enough for the CI regression gate without bloating big numbers.
+    print(f"{name},{us_per_call:.6g},{derived}")
 
 
 @contextmanager

@@ -14,7 +14,8 @@ from repro.quant.quantize import fidelity, params_nbytes, quantize_params
 
 def run() -> None:
     key = jax.random.key(0)
-    fwd = lambda c, p, b: T.forward(c, p, b)[..., 0, :]
+    def fwd(c, p, b):
+        return T.forward(c, p, b)[..., 0, :]
     for arch in ARCH_NAMES:
         cfg = get_config(arch, reduced=True)
         params = T.init_params(cfg, key, jnp.float32)

@@ -4,7 +4,32 @@ memory contention (the system-level Table I analogue, now end-to-end).
 Drives the event-driven :class:`ServingEngine` through its asyncio entry
 point with a Poisson per-tenant trace (the simulator's arrival process),
 real prefill/decode on reduced configs, and KV caches charged against the
-Edge-MultiAI budget.  Reports requests/sec plus per-tenant p50/p95/p99.
+Edge-MultiAI budget.  XLA compiles are pre-warmed outside the timed trace
+(fixed prompt length bounds the shape set), so the virtual clock sees
+steady-state service times and the trace runs *unsaturated* — which is
+what gives the prefetch pipeline actual idle windows to hide loads in,
+exactly the regime the paper's proactive loading targets.
+
+Serving runs under **BFE** (the paper's unload-based eviction): every
+cold procure may fully evict an idle tenant, so the warm-start ratio
+isolates what prefetching itself contributes — iWS-BFE's reactive
+downgrade-instead-of-unload machinery already warm-starts without any
+prefetcher (that effect is measured by the fig5 simulator benchmark),
+which would mask the pipeline under test here.  Both engines run over
+the *same* trace:
+
+* **prefetch** — the background loading pipeline: predicted-next tenants
+  staged ahead of their requests, cold tenants' demand loads overlapped
+  with other tenants' execution;
+* **reactive** — demand-only loading: every load enacted synchronously
+  inside the admit path, stalling the loop for the transfer.  (PR-1
+  also fired synchronous proactive loads between batches, but those
+  were *uncharged* in virtual time — an infinitely fast loader — so
+  they are excluded from the baseline rather than reproduced.)
+
+Reports requests/sec and per-tenant p50/p95/p99 for the prefetch engine,
+plus the head-to-head ``serving/warm_ratio`` and the measured
+``serving/load_overlap_ms`` (load time hidden behind other tenants).
 
     PYTHONPATH=src python -m benchmarks.run serving_throughput
 """
@@ -18,38 +43,73 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving import MultiTenantServer, kv_cache_mb, poisson_trace
+from repro.serving import (MultiTenantServer, kv_cache_mb,
+                           poisson_trace)
+
+TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
+PROMPT_LEN = 8
+MAX_NEW = 4
 
 
-def run() -> None:
-    srv = MultiTenantServer(budget_mb=1.2, policy="iws-bfe",
-                            delta_ms=500.0, max_batch=4,
-                            batch_window_ms=50.0)
-    names = ["tinyllama-1.1b", "mamba2-780m"]
+def _warm_compile(srv: MultiTenantServer,
+                  batch_sizes=(1, 2, 3, 4)) -> None:
+    """Trace every (tenant, precision, batch) prefill/decode shape the
+    run can hit, so compile time stays out of the measured service
+    (the jit cache is process-global: the second engine run hits it)."""
+    for tr in srv.tenants.values():
+        for bits in tr.host:
+            tr.set_variant(tr.zoo.by_bits(bits))
+            for bsz in batch_sizes:
+                tr.generate(np.zeros((bsz, PROMPT_LEN), np.int32), MAX_NEW)
+        tr.set_variant(None)  # leave residency to the manager
+
+
+def _run_engine(prefetch: bool):
+    """One full engine run over the default Poisson trace."""
+    srv = MultiTenantServer(budget_mb=1.0, policy="bfe",
+                            delta_ms=750.0, max_batch=4,
+                            batch_window_ms=50.0, prefetch=prefetch)
     cfgs = {}
-    for n in names:
+    for n in TENANTS:
         cfg = get_config(n, reduced=True)
         cfgs[n] = cfg
         srv.register(n, cfg, T.init_params(cfg, jax.random.key(2),
                                            jnp.float32))
-    # Contended budget with KV headroom for a max-size batch of the most
-    # cache-hungry tenant.
-    kv = max(kv_cache_mb(c, srv.max_batch, 12 + 4) for c in cfgs.values())
+    # Contended: all-bf16 residency impossible, so BFE keeps evicting.
+    kv = max(kv_cache_mb(c, 2, PROMPT_LEN + MAX_NEW)
+             for c in cfgs.values())
     srv.budget_mb = srv.contention_budget(kv)
     srv.start()
+    _warm_compile(srv)
 
-    trace, wl = poisson_trace(cfgs, requests_per_app=12,
-                              mean_iat_ms=1500.0, deviation=0.3,
-                              seed=0, max_new=4)
+    trace, _ = poisson_trace(
+        cfgs, requests_per_app=12, mean_iat_ms=1000.0, deviation=0.3,
+        seed=0, prompt_len=(PROMPT_LEN, PROMPT_LEN + 1), max_new=MAX_NEW)
     t0 = time.monotonic()
     stats = asyncio.run(srv.engine.run_async(trace))
     wall_s = time.monotonic() - t0
     srv.engine.check_event_invariant()
+    srv.close()
+    return srv, stats, wall_s
+
+
+def run() -> None:
+    srv, stats, wall_s = _run_engine(prefetch=True)
+    _, reactive, _ = _run_engine(prefetch=False)
 
     emit("serving/requests_per_sec", stats.get("requests_per_sec", 0.0),
          f"n={stats['requests']} wall={wall_s:.1f}s "
          f"kv_rejections={stats['kv_rejections']} "
          f"kv_downgrades={stats['kv_downgrades']}")
+    emit("serving/warm_ratio", stats["warm_ratio"],
+         f"reactive={reactive['warm_ratio']:.3f} "
+         f"prefetch_hits={stats['prefetch_hits']} "
+         f"prefetch_wasted={stats['prefetch_wasted']} "
+         f"demand_loads={stats['demand_loads']}")
+    emit("serving/load_overlap_ms", stats["load_overlap_ms"],
+         f"loads_committed={stats['loads_committed']} "
+         f"reactive_warm={reactive['warm_ratio']:.3f} "
+         f"prefetch_warm={stats['warm_ratio']:.3f}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

@@ -1,5 +1,5 @@
 """End-to-end driver: the event-driven serving engine running REAL models
-under a device memory budget.
+under a device memory budget, with background prefetching.
 
 Three LM architectures (reduced configs) are registered as tenants; each
 gets a real zoo (bf16 + int8 weight variants built by repro.quant).  A
@@ -7,7 +7,11 @@ Poisson per-tenant trace (the simulator's arrival process) drives the
 engine: the iWS-BFE policy decides which variant of which tenant stays
 resident, every admitted batch's KV cache is charged against the same
 budget, int8 variants run through the fused dequant matmul path, and RNN
-predictors learn each tenant's cadence and trigger proactive loads.
+predictors learn each tenant's cadence and trigger *background* loads —
+predicted-next tenants are staged off the hot path by the
+BackgroundLoader (watch the ``prefetch``/``load``/``cancel`` events in
+the log), cold tenants' demand loads overlap other tenants' execution,
+and in-flight loads claim budget so nothing double-books them.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -47,14 +51,20 @@ stats = server.engine.run_trace(trace)
 server.engine.check_event_invariant()
 
 for ev in server.engine.events:
-    if ev.kind in ("admit", "reject"):
-        print(f"[{ev.t_ms:8.0f}ms] {ev.kind:6s} {ev.app:16s} "
-              f"kv={ev.kv_mb:5.3f}MB used={ev.used_mb:5.2f}MB "
-              f"free={ev.free_mb:5.2f}MB")
+    if ev.kind in ("admit", "reject", "prefetch", "demand", "load",
+                   "cancel"):
+        print(f"[{ev.t_ms:8.0f}ms] {ev.kind:8s} {ev.app:16s} "
+              f"kv={ev.kv_mb:6.3f}MB used={ev.used_mb:5.2f}MB "
+              f"inflight={ev.inflight_mb:5.2f}MB free={ev.free_mb:5.2f}MB")
 
 print(f"\nthroughput: {stats.get('requests_per_sec', 0.0):.2f} req/s   "
       f"kv_rejections={stats['kv_rejections']} "
       f"kv_downgrades={stats['kv_downgrades']}")
+print(f"prefetch pipeline: hits={stats['prefetch_hits']} "
+      f"wasted={stats['prefetch_wasted']} "
+      f"demand_loads={stats['demand_loads']} "
+      f"loads_committed={stats['loads_committed']} "
+      f"load_overlap={stats['load_overlap_ms']:.1f}ms")
 for app, s in stats["per_tenant"].items():
     print(f"  {app:16s} n={s['requests']:3d} warm={s['warm_ratio']:.2f} "
           f"fail={s['fail_ratio']:.2f} p50={s['p50_ms']:7.0f}ms "

@@ -6,7 +6,6 @@ CPU smoke tests (few layers, narrow widths, tiny vocab).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
 from repro.models.config import ModelConfig

@@ -11,14 +11,14 @@ ProcurePlans, and does the warm/cold accounting.  It is used two ways:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-from repro.core.memory_state import INF, MemoryState, TenantState
+from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
-from repro.core.policies import POLICIES, ProcurePlan, kv_headroom_plan
+from repro.core.policies import (POLICIES, ProcurePlan, kv_desperation_plan,
+                                 kv_headroom_plan)
 
 # Inference time is load_ms/12 by default: the 8–17× load/infer asymmetry
 # measured in the paper's Table I (midpoint), which is what makes
@@ -95,17 +95,88 @@ class EdgeMultiAI:
     def set_prediction(self, app: str, t_pred: float) -> None:
         self.state.tenants[app].predicted_next = t_pred
 
+    def plan_proactive(self, app: str, now: float) -> Optional[ProcurePlan]:
+        """The planning half of :meth:`proactive_load`: decide what a
+        t_pred − Δ − θ trigger would stage, without enacting it.  The
+        serving runtime routes the returned plan to the background loader
+        so the weight transfer happens off the hot path; the simulator
+        keeps the synchronous :meth:`proactive_load` wrapper."""
+        if self.policy_name == "none":
+            return None
+        t = self.state.tenants[app]
+        if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
+            return None
+        plan = self._procure(app, now)
+        return plan if plan.ok else None
+
     def proactive_load(self, app: str, now: float) -> None:
         """Fires at t_pred − Δ − θ: stage the highest-precision model that
         fits, ahead of the predicted request (the maximalist promotion)."""
-        if self.policy_name == "none":
-            return
-        t = self.state.tenants[app]
-        if t.loaded is t.zoo.largest:
-            return
-        plan = self._procure(app, now)
-        if plan.ok:
+        plan = self.plan_proactive(app, now)
+        if plan is not None:
             self._enact(plan)
+
+    def plan_prefetch(self, app: str, now: float) -> Optional[ProcurePlan]:
+        """Eviction-free proactive plan for the background loader: the
+        largest variant whose *marginal* footprint fits in surplus
+        memory.  A prefetch is speculation — it must never destabilize
+        residents or out-claim real work, so unlike :meth:`plan_proactive`
+        it refuses plans that need evictions (under pressure the demand
+        path, which can reclaim a cancelled prefetch's memory, takes
+        over)."""
+        if self.policy_name == "none":
+            return None
+        t = self.state.tenants[app]
+        if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
+            return None
+        cur = t.loaded.size_mb if t.loaded else 0.0
+        for v in t.zoo.variants:  # largest first
+            if t.loaded is not None and v.size_mb <= cur:
+                break  # downgrades are admission-time decisions
+            if v.size_mb - cur <= self.state.free_mb:
+                return ProcurePlan(app, v, ())
+        return None
+
+    def plan_demand(self, app: str, now: float,
+                    kv_mb: float = 0.0) -> Optional[ProcurePlan]:
+        """Plan a load for a *cold* tenant with requests already queued,
+        for the background loader: the engine stages the weights off the
+        loop and keeps serving other tenants instead of blocking inside
+        the admit path.  ``kv_mb`` is the waiting batch's expected cache
+        need, staged as a pending planning charge so the chosen variant
+        leaves room for it (no load-then-downgrade thrash at admission).
+        Returns None when the tenant is already resident/mid-staging or
+        no variant fits (admission will then record the counted failure).
+        """
+        if self.policy_name == "none":
+            return None
+        t = self.state.tenants[app]
+        if t.loaded is not None or t.inflight_mb > 0.0:
+            return None
+        self.state.pending_mb += kv_mb
+        try:
+            plan = self._procure(app, now)
+            if not plan.ok:
+                # Serving never fails what desperation can fund: free the
+                # smallest variant's footprint ignoring window/history
+                # protections, then load exactly that — a maximalist
+                # re-procure here would snowball the evictions it just
+                # forced into an even bigger claim.  (Desperation is
+                # enacted, not planned: the policies are pure over the
+                # *current* state.)
+                self._desperate_evict(app, t.zoo.smallest.size_mb)
+                if self.state.free_mb >= t.zoo.smallest.size_mb:
+                    plan = ProcurePlan(app, t.zoo.smallest)
+        finally:
+            self.state.pending_mb -= kv_mb
+        return plan if plan.ok else None
+
+    def _desperate_evict(self, app: str, need_mb: float) -> None:
+        """Enact a :func:`kv_desperation_plan` for ``app``'s need."""
+        for ev in kv_desperation_plan(self.state, app, need_mb):
+            self.state.load(ev.app, ev.new)
+            if self._loader:
+                self._loader(ev.app, ev.new)
 
     def on_request(self, app: str, now: float) -> InferenceRecord:
         t = self.state.tenants[app]
@@ -164,8 +235,8 @@ class EdgeMultiAI:
     # KV-cache residency (serving runtime): batches charge their decode
     # caches against the same budget the eviction policies manage.
     # ------------------------------------------------------------------
-    def admit_batch(self, app: str, now: float, kv_mb: float
-                    ) -> BatchAdmission:
+    def admit_batch(self, app: str, now: float, kv_mb: float,
+                    demand_cold: bool = False) -> BatchAdmission:
         """Admit one batch: ensure weights are resident (procuring if
         needed), then charge ``kv_mb`` of cache.  The KV need is staged as
         a pending planning charge during procurement so the policies pick
@@ -174,11 +245,34 @@ class EdgeMultiAI:
         (e.g. the tenant was already warm at a large variant), scavenge
         victims' weight memory, then downgrade the requester itself; if
         the cache still cannot fit, the batch is rejected and counted —
-        never an invariant assert."""
+        never an invariant assert.
+
+        ``demand_cold``: the weights are only resident because a
+        demand-triggered background load just committed for this very
+        batch — the request waited out the transfer, so the serve is
+        recorded as a cold start (latency includes the load) even though
+        ``loaded`` is non-None by admission time."""
         t = self.state.tenants[app]
         self.state.pending_mb += kv_mb
         try:
             rec = self.on_request(app, now)
+            if rec.failed and self.policy_name != "none":
+                # The pure policies refuse to unload (iWS-BFE only ever
+                # replaces), but in the serving runtime a failure is
+                # strictly worse than evicting an idle tenant: free the
+                # smallest variant's footprint ignoring protections and
+                # serve degraded (smallest only — not a maximalist
+                # re-procure, which would snowball the forced evictions
+                # into an even bigger claim).
+                self._desperate_evict(app, t.zoo.smallest.size_mb)
+                small = t.zoo.smallest
+                if self.state.free_mb >= small.size_mb:
+                    self._enact(ProcurePlan(app, small))
+                    rec.failed, rec.warm = False, False
+                    rec.bits = small.bits
+                    rec.accuracy = small.accuracy
+                    rec.latency_ms = (small.load_ms
+                                      * (1.0 + 1.0 / LOAD_OVER_INFER))
         finally:
             self.state.pending_mb -= kv_mb
         if rec.failed:
@@ -207,6 +301,10 @@ class EdgeMultiAI:
             if self._loader:
                 self._loader(app, nxt)
             self_downgraded = True
+        if self.state.free_mb < kv_mb and self.policy_name != "none":
+            # Desperation: rejecting the batch is the worst outcome, so
+            # the window/history protections yield before the cache does.
+            self._desperate_evict(app, kv_mb)
         if self.state.free_mb < kv_mb:
             self.kv_rejections += 1
             # The inference never executes: retract the success record
@@ -225,6 +323,10 @@ class EdgeMultiAI:
             rec.latency_ms = (
                 final.load_ms / LOAD_OVER_INFER if rec.warm
                 else final.load_ms + final.load_ms / LOAD_OVER_INFER)
+        if demand_cold and rec.warm:
+            rec.warm = False
+            rec.latency_ms = (final.load_ms
+                              + final.load_ms / LOAD_OVER_INFER)
         self.state.reserve_kv(app, kv_mb)
         return BatchAdmission(app, now, kv_mb, rec.warm, False,
                               final.bits, self_downgraded)

@@ -12,7 +12,6 @@ invariant "Σ loaded sizes ≤ budget, always".
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
@@ -27,6 +26,7 @@ class TenantState:
     zoo: ModelZoo
     loaded: Optional[ModelVariant] = None
     kv_mb: float = 0.0  # live KV/decode-cache MB charged to this tenant
+    inflight_mb: float = 0.0  # MB claimed by a background load mid-staging
     last_request: float = -INF  # time of most recent actual request
     predicted_next: float = INF  # next predicted request time (INF = none)
     requests: int = 0
@@ -60,21 +60,31 @@ class MemoryState:
         return sum(t.kv_mb for t in self.tenants.values())
 
     @property
+    def inflight_mb(self) -> float:
+        """MB claimed by background loads that have not yet committed —
+        prefetched weights mid-staging.  Committed memory the instant the
+        load lands (``load`` + ``release_inflight``), or returned to the
+        pool if the prefetch is cancelled."""
+        return sum(t.inflight_mb for t in self.tenants.values())
+
+    @property
     def used_mb(self) -> float:
         """Weights + live KV caches: *runtime* memory, not just weights."""
         return self.weights_mb + self.kv_mb
 
     @property
     def free_mb(self) -> float:
-        return self.budget_mb - self.used_mb - self.pending_mb
+        return (self.budget_mb - self.used_mb - self.pending_mb
+                - self.inflight_mb)
 
     def loaded_variant(self, app: str) -> Optional[ModelVariant]:
         return self.tenants[app].loaded
 
     def check_invariant(self) -> None:
-        if self.used_mb > self.budget_mb + 1e-6:
+        if self.used_mb + self.inflight_mb > self.budget_mb + 1e-6:
             raise AssertionError(
                 f"memory invariant violated: {self.used_mb:.1f}MB used "
+                f"+ {self.inflight_mb:.1f}MB in-flight "
                 f"> {self.budget_mb:.1f}MB budget")
 
     # -- mutations (the manager calls these after a policy decision) -------
@@ -95,6 +105,24 @@ class MemoryState:
         """Return a retired batch's KV memory to the pool."""
         t = self.tenants[app]
         t.kv_mb = max(0.0, t.kv_mb - mb)
+
+    def reserve_inflight(self, app: str, mb: float) -> None:
+        """Claim memory for a background load mid-staging.  The charge is
+        what the completed load will *add* over the tenant's currently
+        loaded variant, so eviction/procurement (which plan against
+        ``free_mb``) cannot double-book memory a prefetch already owns.
+        Callers must verify ``free_mb >= mb`` first — an unfundable
+        prefetch is a planning decision, never an invariant violation."""
+        if mb < 0:
+            raise ValueError(f"negative in-flight reservation: {mb}")
+        self.tenants[app].inflight_mb += mb
+        self.check_invariant()
+
+    def release_inflight(self, app: str, mb: float) -> None:
+        """A background load committed or was cancelled: return its
+        in-flight claim to the pool (commit re-charges it as weights)."""
+        t = self.tenants[app]
+        t.inflight_mb = max(0.0, t.inflight_mb - mb)
 
     def in_window(self, app: str, now: float, delta: float,
                   theta: float = 0.0) -> bool:

@@ -24,13 +24,11 @@ the paper precisely:
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.memory_state import INF, MemoryState, TenantState
+from repro.core.memory_state import INF, MemoryState
 from repro.core.model_zoo import ModelVariant
 
 
@@ -83,7 +81,8 @@ def _windows_overlap(state: MemoryState, a: str, b: str,
 def lfe(state: MemoryState, app: str, now: float, *, delta: float,
         history: float = 0.0) -> ProcurePlan:
     victims = [a for a in state.minimalist_set(now, delta)
-               if a != app and state.tenants[a].loaded is not None]
+               if a != app and state.tenants[a].loaded is not None
+               and state.tenants[a].inflight_mb == 0.0]
     victims.sort(key=lambda a: -state.tenants[a].loaded.size_mb)
     for variant in state.tenants[app].zoo.variants:
         evictions: List[Eviction] = []
@@ -102,7 +101,8 @@ def lfe(state: MemoryState, app: str, now: float, *, delta: float,
 def bfe(state: MemoryState, app: str, now: float, *, delta: float,
         history: float = 0.0) -> ProcurePlan:
     victims = [a for a in state.minimalist_set(now, delta)
-               if a != app and state.tenants[a].loaded is not None]
+               if a != app and state.tenants[a].loaded is not None
+               and state.tenants[a].inflight_mb == 0.0]
     for variant in state.tenants[app].zoo.variants:
         evictions: List[Eviction] = []
         remaining = list(victims)
@@ -130,15 +130,19 @@ def bfe(state: MemoryState, app: str, now: float, *, delta: float,
 # Policy 3: Warm-Start-aware Best-Fit Eviction
 # ---------------------------------------------------------------------------
 def _downgrade_candidates(state: MemoryState, app: str, now: float,
-                          delta: float, *, require_history: float = 0.0
-                          ) -> List[str]:
+                          delta: float, *, require_history: float = 0.0,
+                          include_smallest: bool = False) -> List[str]:
     out = []
     for a in state.minimalist_set(now, delta):
         t = state.tenants[a]
         if a == app or t.loaded is None:
             continue
-        if t.loaded is t.zoo.smallest:
-            continue  # nothing to scavenge
+        if t.inflight_mb > 0.0:
+            continue  # mid-staging: a background load owns this tenant's
+            # residency until it commits or is cancelled; downgrading it
+            # underneath the loader would desync the in-flight charge
+        if t.loaded is t.zoo.smallest and not include_smallest:
+            continue  # nothing to scavenge (unless unloading outright)
         if _windows_overlap(state, app, a, delta):
             continue  # lowest eviction priority: skip (paper §III-B-4)
         if require_history and t.last_request > now - require_history:
@@ -243,16 +247,84 @@ def kv_headroom_plan(state: MemoryState, app: str, now: float,
     minimalist victims to their smallest variant (same candidate filters as
     iWS-BFE: window-overlap and LRU-K history exempt), best-fit first.
 
+    If downgrades alone cannot cover the need, victims are *unloaded*
+    outright — the same "high inference demand" fallback WS-BFE applies
+    to weight pressure (§III-B-1), extended to cache pressure: a decode
+    cache that cannot fit is a failed inference, which the paper weighs
+    strictly worse than a future cold start.  Already-downgraded victims
+    go first (their remaining footprint is minimal), then other
+    minimalist tenants sitting at their smallest variant, best-fit.
+
     Unlike the procure policies this never touches the requester's own
     variant — the caller decides whether to self-downgrade if scavenging
     victims is not enough.  The returned evictions may be insufficient;
     the caller re-checks ``free_mb`` after enacting.
     """
+    def short(evs: List[Eviction]) -> float:
+        return need_mb - state.free_mb - sum(e.freed_mb for e in evs)
+
     cands = _downgrade_candidates(state, app, now, delta,
                                   require_history=history)
-    return tuple(_scavenge_best_fit(
-        state, cands,
-        lambda evs: need_mb - state.free_mb - sum(e.freed_mb for e in evs)))
+    evictions = list(_scavenge_best_fit(state, cands, short))
+    if short(evictions) <= 0:
+        return tuple(evictions)
+    # Cache-pressure fallback: downgrades were not enough — unload.
+    evictions = [Eviction(e.app, e.old, None) for e in evictions]
+    taken = {e.app for e in evictions}
+    pool = [a for a in _downgrade_candidates(state, app, now, delta,
+                                             require_history=history,
+                                             include_smallest=True)
+            if a not in taken]
+    while (need := short(evictions)) > 0 and pool:
+        def loaded_mb(a: str) -> float:
+            return state.tenants[a].loaded.size_mb
+        covering = [a for a in pool if loaded_mb(a) >= need]
+        pick = (min(covering, key=loaded_mb) if covering
+                else max(pool, key=loaded_mb))
+        pool.remove(pick)
+        evictions.append(Eviction(pick, state.tenants[pick].loaded, None))
+    return tuple(evictions)
+
+
+def kv_desperation_plan(state: MemoryState, app: str,
+                        need_mb: float) -> Tuple[Eviction, ...]:
+    """Last resort before rejecting a batch for cache pressure: ignore
+    the window-overlap and LRU-K protections and scavenge every other
+    tenant — downgrades first (cheapest robustness loss, biggest
+    scavengeable first), then outright unloads.  A failed inference
+    outranks every warm-start heuristic in the paper's cost model, and
+    without this pass a predicting engine is *more* rejection-prone than
+    a reactive one (predictions create windows, windows protect victims).
+    Tenants mid-staging stay exempt — the loader owns their residency.
+    """
+    def short(evs: List[Eviction]) -> float:
+        return need_mb - state.free_mb - sum(e.freed_mb for e in evs)
+
+    cands = [a for a, t in state.tenants.items()
+             if a != app and t.loaded is not None and t.inflight_mb == 0.0]
+
+    def scavengeable(a: str) -> float:
+        t = state.tenants[a]
+        return t.loaded.size_mb - t.zoo.smallest.size_mb
+
+    evictions: List[Eviction] = []
+    for a in sorted(cands, key=scavengeable, reverse=True):
+        if short(evictions) <= 0:
+            break
+        t = state.tenants[a]
+        if t.loaded is not t.zoo.smallest:
+            evictions.append(Eviction(a, t.loaded, t.zoo.smallest))
+    if short(evictions) > 0:
+        taken = {e.app for e in evictions}
+        evictions = [Eviction(e.app, e.old, None) for e in evictions]
+        rest = [a for a in cands if a not in taken]
+        for a in sorted(rest, key=lambda a: state.tenants[a].loaded.size_mb,
+                        reverse=True):
+            if short(evictions) <= 0:
+                break
+            evictions.append(
+                Eviction(a, state.tenants[a].loaded, None))
+    return tuple(evictions)
 
 
 POLICIES: Dict[str, Callable[..., ProcurePlan]] = {

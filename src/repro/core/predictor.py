@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,12 +105,25 @@ class SeriesPredictor:
         return float(losses[-1])
 
     def predict(self) -> float:
-        """Predict the next value from the trailing context."""
+        """Predict the next value from the trailing context.
+
+        The normalizer is recomputed from the trailing context rather than
+        taken from ``self.mean``: the history keeps growing between
+        ``fit()`` calls (the serving engine observes every arrival), so
+        the fit-time mean goes stale and a drifting series would be fed to
+        the RNN at the wrong scale.  Before the first ``fit()`` the RNN
+        weights are random, so the running mean of the context *is* the
+        prediction — the same fallback used while history is short.
+        """
         h = np.asarray(self.history, np.float32)
         if len(h) < self.context:
             return float(np.mean(h)) if len(h) else self.mean
-        xs = jnp.asarray(h[-self.context:] / self.mean)[None]
-        return float(rnn_forward(self.params, xs)[0] * self.mean)
+        ctx = h[-self.context:]
+        mean = float(np.mean(ctx)) or 1.0
+        if self.losses is None:  # never fit: untrained RNN is noise
+            return mean
+        xs = jnp.asarray(ctx / mean)[None]
+        return float(rnn_forward(self.params, xs)[0] * mean)
 
 
 class RequestPredictor(SeriesPredictor):

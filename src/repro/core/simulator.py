@@ -15,10 +15,9 @@ Reproduces the paper's evaluation protocol:
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np

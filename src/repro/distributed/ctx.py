@@ -12,7 +12,6 @@ in EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Tuple
 

@@ -9,11 +9,9 @@ atomic).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
-import jax
 import numpy as np
 
 from repro.distributed import checkpoint as ckpt

@@ -11,11 +11,9 @@ awkward ones (hymba's 25 heads / 3257-wide in_proj, granite's odd vocab).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig

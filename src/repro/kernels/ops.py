@@ -13,12 +13,10 @@ Models call these entry points only; nothing below this layer leaks upward.
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 

@@ -8,7 +8,6 @@ kernels cannot be lowered on the CPU backend.  Everything here is plain
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -325,7 +324,6 @@ def causal_conv1d_step(
     buf: jnp.ndarray,  # (B, W-1, C) rolling context
 ):
     """Returns (y, new_buf)."""
-    W = w.shape[0]
     full = jnp.concatenate([buf, x[:, None, :]], axis=1)  # (B, W, C)
     y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w.astype(jnp.float32))
     y = jax.nn.silu(y + b.astype(jnp.float32)[None, :]).astype(x.dtype)

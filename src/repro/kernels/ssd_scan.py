@@ -19,7 +19,6 @@ TPU mapping
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional
 
 import jax

@@ -27,10 +27,9 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch import roofline as RL

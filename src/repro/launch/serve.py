@@ -7,7 +7,6 @@ models under a device memory budget, driven by a synthetic request trace.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp

@@ -5,12 +5,10 @@ execute — one definition, two uses.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed import sharding as SH
 from repro.launch.mesh import data_axes
@@ -18,7 +16,7 @@ from repro.launch.specs import SHAPE_SPECS, input_specs
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.training.optim import AdamW
-from repro.training.train_step import (TrainState, abstract_state,
+from repro.training.train_step import (abstract_state,
                                        make_train_step)
 
 
@@ -62,7 +60,7 @@ def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh, *,
         if dp_only:
             # no TP: compute weights replicated; state fully ZeRO-sharded
             pspecs = jax.tree.map(
-                lambda l: P(*([None] * l.ndim)), state_abs.params)
+                lambda leaf: P(*([None] * leaf.ndim)), state_abs.params)
         else:
             pspecs = SH.param_specs(cfg, state_abs.params, mesh)
         sspecs = SH.state_specs(cfg, state_abs, mesh, pspecs, zero1=True,

@@ -5,10 +5,8 @@ per-arch files in ``repro.configs`` instantiate it with published numbers.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

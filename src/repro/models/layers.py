@@ -7,7 +7,6 @@ are consumed one slice at a time inside the layer scan in
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

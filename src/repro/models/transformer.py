@@ -7,8 +7,7 @@ for the 512-device dry-run and for fleet compile latency).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,9 +2,11 @@ from repro.serving.batcher import Batch, Batcher, Request
 from repro.serving.engine import (EngineEvent, RequestResult, ServingEngine,
                                   kv_cache_mb, poisson_trace,
                                   trace_from_workload)
+from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
 from repro.serving.server import MultiTenantServer, ServeResult, TenantRuntime
 
 __all__ = ["Batch", "Batcher", "Request", "MultiTenantServer",
            "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
            "EngineEvent", "kv_cache_mb", "poisson_trace",
-           "trace_from_workload"]
+           "trace_from_workload", "BackgroundLoader", "InflightLoad",
+           "LoadRecord"]

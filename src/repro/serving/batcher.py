@@ -10,7 +10,7 @@ from __future__ import annotations
 import itertools
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,13 +46,31 @@ class Batcher:
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())
 
-    def next_batch(self) -> Optional[Batch]:
+    def queued(self, app: str) -> int:
+        """Depth of one tenant's queue."""
+        return len(self.queues.get(app, ()))
+
+    def queued_apps(self) -> Tuple[str, ...]:
+        return tuple(self.queues)
+
+    def head_arrival(self, app: str) -> Optional[float]:
+        """Arrival time of the tenant's oldest queued request."""
+        q = self.queues.get(app)
+        return q[0].arrival_ms if q else None
+
+    def next_batch(self, exclude: Optional[Iterable[str]] = None
+                   ) -> Optional[Batch]:
         """Pop the largest same-tenant group (up to max_batch), FIFO
         within the tenant; queue-size ties go to the tenant whose head
-        request has waited longest (no starvation under equal load)."""
-        if not self.pending():
+        request has waited longest (no starvation under equal load).
+        Tenants in ``exclude`` (mid-load: their weights are still
+        staging) are skipped so everyone else keeps serving; returns None
+        when every queued tenant is excluded."""
+        skip = frozenset(exclude) if exclude else frozenset()
+        apps = [a for a in self.queues if a not in skip]
+        if not apps:
             return None
-        app = max(self.queues,
+        app = max(apps,
                   key=lambda a: (len(self.queues[a]),
                                  -self.queues[a][0].arrival_ms,
                                  -self.queues[a][0].rid))

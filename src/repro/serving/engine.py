@@ -25,8 +25,9 @@ from __future__ import annotations
 
 import asyncio
 import functools
+import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -50,8 +51,8 @@ def kv_cache_mb(cfg: ModelConfig, batch: int, max_len: int,
     repeat (ModelConfig is frozen/hashable)."""
     leaves = jax.tree.leaves(
         T.abstract_cache(cfg, batch, max_len, quantized=quantized))
-    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
-               for l in leaves) / MB
+    return sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+               for leaf in leaves) / MB
 
 
 @dataclass
@@ -76,14 +77,16 @@ class RequestResult:
 @dataclass
 class EngineEvent:
     """Audit-trail entry emitted at every engine state change; the
-    invariant tests replay these to check ``used_mb ≤ budget_mb`` at
-    every point in the run, not just at the end."""
+    invariant tests replay these to check ``used_mb + inflight_mb ≤
+    budget_mb`` at every point in the run, not just at the end."""
     t_ms: float
-    kind: str  # submit | admit | reject | retire
+    # submit | admit | reject | retire | prefetch | demand | load | cancel
+    kind: str
     app: str
     kv_mb: float
     used_mb: float
     free_mb: float
+    inflight_mb: float = 0.0  # background-load claims at event time
 
 
 Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
@@ -104,7 +107,8 @@ class ServingEngine:
 
     def __init__(self, server, *, max_batch: int = 8,
                  batch_window_ms: float = 0.0,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 loader=None):
         self.server = server
         self.batcher = Batcher(max_batch=max_batch)
         self.max_batch = max_batch
@@ -114,6 +118,16 @@ class ServingEngine:
         self.kv_downgrades = 0  # requester shrank itself to fit its cache
         self.weight_failures = 0  # batches whose weights were unprocurable
         self._executor = executor or _default_executor
+        # Background loading pipeline (None = reactive PR-1 behavior:
+        # every load is enacted synchronously inside the admit path and
+        # charges the loop clock).
+        self.loader = loader
+        if loader is not None:
+            loader.on_event = self._loader_event
+        # Execution spans (start, end, app) inside the current loader
+        # window — used to measure how much of each load was hidden
+        # behind other tenants' prefill/decode.
+        self._spans: List[Tuple[float, float, str]] = []
 
     @property
     def kv_rejections(self) -> int:
@@ -126,7 +140,13 @@ class ServingEngine:
     def _event(self, t_ms: float, kind: str, app: str, kv_mb: float) -> None:
         st = self.server.manager.state
         self.events.append(EngineEvent(
-            t_ms, kind, app, kv_mb, st.used_mb, st.free_mb))
+            t_ms, kind, app, kv_mb, st.used_mb, st.free_mb,
+            st.inflight_mb))
+
+    def _loader_event(self, t_ms: float, kind: str, app: str,
+                      mb: float) -> None:
+        """Mirror loader lifecycle transitions into the audit trail."""
+        self._event(t_ms, kind, app, mb)
 
     def submit(self, req: Request, now_ms: float) -> None:
         """Enqueue a request; feeds the tenant's RNN arrival predictor."""
@@ -138,24 +158,52 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def execute_batch(self, batch: Batch, now_ms: float,
-                      extra: Optional[dict] = None
+                      extra: Optional[dict] = None, *,
+                      charge_load: bool = False
                       ) -> Tuple[List[RequestResult], float,
                                  Optional[np.ndarray]]:
         """One admit→(load/evict)→prefill→decode→retire cycle.
 
-        Returns the per-request results, the measured service time in ms
-        (wall clock of the real model execution), and the generated
-        tokens (None when the batch was rejected).
+        Returns the per-request results, the service time in ms (wall
+        clock of the real model execution, plus the variant's load time
+        when ``charge_load`` is set and the admit cold-loaded — the
+        reactive engine's synchronous load stalls the whole loop, and
+        the virtual clock must say so), and the generated tokens (None
+        when the batch was rejected).
+
+        When a background loader is attached, a batch whose weights were
+        staged by a demand-triggered load is admitted ``demand_cold``:
+        the request waited out the transfer, so the serve is a cold
+        start even though the weights are resident by admission time.
         """
         mgr = self.server.manager
         assert mgr is not None, "server.start() before engine use"
         tr = self.server.tenants[batch.app]
         total_len = batch.prompts.shape[1] + batch.max_new
         kv_mb = kv_cache_mb(tr.cfg, len(batch.requests), total_len)
-        adm: BatchAdmission = mgr.admit_batch(batch.app, now_ms, kv_mb)
+        if self.loader is not None:
+            # Sync callers (serve()) don't defer on the loader the way
+            # run_trace does: commit whatever is virtually complete, and
+            # if this tenant still has a load mid-flight, release its
+            # claim and procure synchronously — otherwise an admission-
+            # path upgrade double-tracks the staged variant and the
+            # in-flight charge leaks forever.
+            self._reap_loads(now_ms)
+            if batch.app in self.loader.inflight:
+                self.loader.cancel(batch.app, now_ms)
+        staged = (self.loader.peek_use(batch.app)
+                  if self.loader is not None else None)
+        adm: BatchAdmission = mgr.admit_batch(
+            batch.app, now_ms, kv_mb,
+            demand_cold=staged.demand if staged is not None else False)
         if adm.self_downgraded:
             self.kv_downgrades += 1
         if adm.failed:
+            if staged is not None:
+                # Consume the staged-load record even on rejection — left
+                # behind it would mark the tenant's *next* (genuinely
+                # warm) admission demand-cold.
+                self.loader.take_use(batch.app, False)
             if not adm.kv_rejected:
                 self.weight_failures += 1
             self._event(now_ms, "reject", batch.app, kv_mb)
@@ -167,6 +215,18 @@ class ServingEngine:
                 for r in batch.requests]
             self.results.extend(results)
             return results, 0.0, None
+        if staged is not None:
+            self.loader.take_use(batch.app, adm.warm)
+        # A cold serve whose load happened synchronously inside
+        # admit_batch (reactive mode, or a loader-mode admission that
+        # slipped past demand staging — e.g. its plan was unfundable and
+        # desperation loaded on the spot) stalled the loop thread for
+        # the transfer, so the virtual clock is charged for it.  A
+        # demand-staged cold (``staged``) already paid in queue time.
+        sync_cold = charge_load or (self.loader is not None
+                                    and staged is None)
+        load_pen_ms = (tr.zoo.by_bits(adm.bits).load_ms
+                       if sync_cold and not adm.warm else 0.0)
         self._event(now_ms, "admit", batch.app, adm.kv_mb)
         t0 = time.monotonic()
         try:
@@ -186,7 +246,7 @@ class ServingEngine:
                               len(batch.requests), 0.0)
                 for r in batch.requests)
             raise
-        service_ms = (time.monotonic() - t0) * 1e3
+        service_ms = (time.monotonic() - t0) * 1e3 + load_pen_ms
         done_ms = now_ms + service_ms
         mgr.release_kv(batch.app, adm.kv_mb)
         self._event(done_ms, "retire", batch.app, -adm.kv_mb)
@@ -199,16 +259,85 @@ class ServingEngine:
         return results, service_ms, tokens
 
     # ------------------------------------------------------------------
+    def _stage_demand_loads(self, now: float) -> None:
+        """Cold tenants with queued work get their load staged off the
+        loop: plan a variant (with the waiting batch's cache need as a
+        planning charge) and hand it to the background loader.  The
+        batch itself stays queued — ``run_trace`` skips the tenant until
+        the load commits, while everyone else keeps prefilling/decoding.
+        If no variant fits, the batch is admitted anyway so the failure
+        is counted the normal way."""
+        mgr = self.server.manager
+        for app in self.batcher.queued_apps():
+            if app in self.loader.inflight:
+                continue
+            if mgr.state.tenants[app].loaded is not None:
+                continue
+            q = self.batcher.queues[app][: self.max_batch]
+            total_len = (max(len(r.prompt) for r in q)
+                         + max(r.max_new for r in q))
+            kv = kv_cache_mb(self.server.tenants[app].cfg, len(q),
+                             total_len)
+            plan = mgr.plan_demand(app, now, kv)
+            if plan is None:
+                # Speculation yields to demand: cancel predictor-driven
+                # prefetches (least-credible prediction first) until the
+                # real request's load becomes fundable — their in-flight
+                # claims must never starve actual queued work.
+                for guess in sorted(
+                        (a for a, ld in self.loader.inflight.items()
+                         if not ld.demand),
+                        key=lambda a: -self.loader.inflight[a].predicted_ms):
+                    self.loader.cancel(guess, now)
+                    plan = mgr.plan_demand(app, now, kv)
+                    if plan is not None:
+                        break
+            if plan is not None:
+                self.loader.enqueue(plan, now, demand=True)
+
+    def _reap_loads(self, now: float) -> None:
+        """Commit loads whose virtual transfer has finished and measure
+        how much of each load interval was hidden behind *other*
+        tenants' execution — the paper's overlap claim, quantified."""
+        for rec in self.loader.reap(now):
+            t0, t1 = rec.t_enqueue_ms, rec.t_ready_ms
+            busy = sum(min(e, t1) - max(s, t0)
+                       for s, e, a in self._spans
+                       if a != rec.app and e > t0 and s < t1)
+            rec.overlap_ms = min(busy, rec.load_ms)
+            self.loader.load_overlap_ms += rec.overlap_ms
+        horizon = min((ld.t_enqueue_ms
+                       for ld in self.loader.inflight.values()),
+                      default=now)
+        self._spans = [sp for sp in self._spans if sp[1] > horizon]
+
     def run_trace(self, requests: Sequence[Request]) -> dict:
         """Closed-loop trace replay: arrivals enter the batcher at their
         trace timestamps; the single engine pulls the next batch whenever
         it is idle, waiting out the batching window when the queue is
-        short and another arrival is imminent."""
+        short and another arrival is imminent.
+
+        With a background loader attached (the default via
+        ``MultiTenantServer``), no weight transfer ever blocks the loop:
+        predicted-next tenants are prefetched ahead of their requests,
+        cold tenants' demand loads stage while other tenants execute,
+        and a tenant is only deferred until its own load commits.
+        Without a loader this is the reactive PR-1 engine — every cold
+        load happens synchronously inside the admit path and is charged
+        to the loop clock, stalling every queued tenant behind it.
+        """
         pending = sorted(requests, key=lambda r: r.arrival_ms)
         i, n, now = 0, len(pending), 0.0
         while i < n or self.batcher.pending():
             if not self.batcher.pending():
-                now = max(now, pending[i].arrival_ms)
+                t_next = pending[i].arrival_ms if i < n else math.inf
+                if self.loader is not None:
+                    # Idle wake-ups: a pending load commit, or a tenant's
+                    # prefetch trigger (t_pred − Δ − θ) — sleeping past
+                    # either would turn a hideable load into a stall.
+                    t_next = min(t_next, self.loader.earliest_ready(),
+                                 self.server.next_prefetch_trigger(now))
+                now = max(now, t_next)
             while i < n and pending[i].arrival_ms <= now:
                 self.submit(pending[i], pending[i].arrival_ms)
                 i += 1
@@ -217,10 +346,35 @@ class ServingEngine:
                     and pending[i].arrival_ms <= now + self.batch_window_ms):
                 now = pending[i].arrival_ms
                 continue
-            self.server.predict_and_preload(now)
-            batch = self.batcher.next_batch()
-            _, service_ms, _ = self.execute_batch(batch, now)
+            if self.loader is not None:
+                self._reap_loads(now)
+                self.server.predict_and_preload(now)
+                self._stage_demand_loads(now)
+                batch = self.batcher.next_batch(
+                    exclude=self.loader.inflight)
+                if batch is None:
+                    # Every queued tenant is awaiting its own load (or
+                    # nothing is queued at all): jump to the earliest
+                    # commit or the next arrival — the loop idles, it
+                    # does not block on a transfer.
+                    t_next = self.loader.earliest_ready()
+                    if i < n:
+                        t_next = min(t_next, pending[i].arrival_ms)
+                    if t_next is not math.inf:
+                        now = max(now, t_next)
+                        continue
+                    break
+            else:
+                batch = self.batcher.next_batch()
+            t0 = now
+            _, service_ms, _ = self.execute_batch(
+                batch, now, charge_load=self.loader is None)
             now += service_ms
+            self._spans.append((t0, now, batch.app))
+        if self.loader is not None:
+            # Trace drained: commit whatever is still staging so the
+            # audit trail balances and residency reflects the weights.
+            self._reap_loads(math.inf)
         return self.stats()
 
     async def run_async(self, requests: Sequence[Request]) -> dict:
@@ -229,7 +383,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
-        """Aggregate + per-tenant latency percentiles and throughput."""
+        """Aggregate + per-tenant latency percentiles and throughput,
+        plus the prefetch pipeline's hit/waste/overlap counters."""
         out: dict = {
             "requests": len(self.results),
             "kv_downgrades": self.kv_downgrades,
@@ -237,8 +392,18 @@ class ServingEngine:
             "weight_failures": self.weight_failures,
             "per_tenant": {},
         }
+        if self.loader is not None:
+            out.update(
+                prefetch_hits=self.loader.prefetch_hits,
+                prefetch_wasted=self.loader.prefetch_wasted,
+                demand_loads=self.loader.demand_loads,
+                loads_committed=self.loader.loads_committed,
+                load_overlap_ms=self.loader.load_overlap_ms)
         if not self.results:
+            out["warm_ratio"] = 0.0
             return out
+        out["warm_ratio"] = (sum(r.warm for r in self.results)
+                             / len(self.results))
         span_ms = (max(r.done_ms for r in self.results)
                    - min(r.arrival_ms for r in self.results))
         out["requests_per_sec"] = (
@@ -267,14 +432,16 @@ class ServingEngine:
 
     def check_event_invariant(self, budget_mb: Optional[float] = None
                               ) -> None:
-        """Every recorded event must respect the memory budget."""
+        """Every recorded event must respect the memory budget —
+        committed memory *and* in-flight background-load claims."""
         budget = (budget_mb if budget_mb is not None
                   else self.server.manager.state.budget_mb)
         for ev in self.events:
-            if ev.used_mb > budget + 1e-6:
+            if ev.used_mb + ev.inflight_mb > budget + 1e-6:
                 raise AssertionError(
                     f"budget exceeded at t={ev.t_ms:.1f}ms "
                     f"({ev.kind} {ev.app}): {ev.used_mb:.2f}MB "
+                    f"+ {ev.inflight_mb:.2f}MB in-flight "
                     f"> {budget:.2f}MB")
 
 
@@ -302,10 +469,12 @@ def poisson_trace(cfgs: Dict[str, ModelConfig], *,
                   mean_iat_ms: float = 2000.0,
                   deviation: float = 0.3,
                   seed: int = 0,
+                  prompt_len: Tuple[int, int] = (4, 12),
                   max_new: int = 8) -> Tuple[List[Request], Workload]:
     """Convenience: generate_workload → requests, returning both so the
     caller can feed predictions to the manager if desired."""
     wl = generate_workload(list(cfgs), requests_per_app=requests_per_app,
                            mean_iat_ms=mean_iat_ms, deviation=deviation,
                            seed=seed)
-    return trace_from_workload(wl, cfgs, seed=seed, max_new=max_new), wl
+    return trace_from_workload(wl, cfgs, seed=seed,
+                               prompt_len=prompt_len, max_new=max_new), wl

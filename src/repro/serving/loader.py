@@ -1,0 +1,240 @@
+"""Background model-loading pipeline: staging tenant weights off the hot
+path (the live-engine half of the paper's iWS-BFE prefetch story).
+
+Table 1 of the paper measures model *load* time at 8-17x inference time —
+which is exactly why Edge-MultiAI fires proactive loads at t_pred - Delta
+- theta instead of waiting for the request.  PR 1's engine still enacted
+every load synchronously inside the admit path, so one tenant's cold
+start stalled every other tenant's decode loop.  This module closes that
+gap:
+
+* **One staging channel.**  Every physical weight movement — prefetches,
+  demand loads, victim downgrades, synchronous admission-path loads —
+  funnels through a single worker thread (:meth:`BackgroundLoader.stage`).
+  That gives a total order over device mutations that matches the order
+  of the accounting mutations on the engine thread, so a victim's
+  background downgrade can never land *after* a later reactive reload of
+  the same tenant.
+
+* **In-flight memory charges.**  An enqueued load immediately claims the
+  memory its commit will add (``MemoryState.reserve_inflight``), so
+  eviction/procurement planning against ``free_mb`` cannot double-book
+  memory a prefetch already owns; a cancelled prefetch releases the
+  charge.  Tenants mid-staging are exempt from victim selection (see
+  ``repro.core.policies``) — the loader owns their residency until the
+  load commits or is cancelled.
+
+* **Virtual-time completion.**  A load enqueued at virtual time ``t``
+  commits at ``t + variant.load_ms`` (the zoo's measured transfer time),
+  while the wall-clock ``jax.device_put`` runs on the worker.  The engine
+  defers batches whose tenant is mid-staging and keeps serving everyone
+  else — the load is *overlapped*, and the overlap is measured
+  (``load_overlap_ms``) as the time other tenants spent executing inside
+  the load interval.
+
+Lifecycle of one load::
+
+    enqueue(plan)  ->  in-flight (charge reserved, evictions enacted,
+                       device_put queued on the worker)
+        |-- reap(now >= ready_ms)  ->  committed (state.load, charge
+        |                              released, awaiting first use)
+        |       |-- first admit    ->  prefetch hit (warm) or demand-cold
+        |-- cancel(..)             ->  charge released, device restored,
+                                       counted as wasted prefetch
+"""
+from __future__ import annotations
+
+import math
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.model_zoo import ModelVariant
+from repro.core.policies import ProcurePlan
+
+INF = math.inf
+
+# (t_ms, kind, app, mb) — the engine mirrors these into its audit trail.
+LoadEventHook = Callable[[float, str, str, float], None]
+
+
+@dataclass
+class InflightLoad:
+    """One background load between enqueue and commit/cancel."""
+    app: str
+    variant: ModelVariant
+    t_enqueue_ms: float
+    ready_ms: float  # virtual completion: t_enqueue + variant.load_ms
+    charge_mb: float  # in-flight claim = what the commit will add
+    demand: bool  # a request is already waiting (vs. predictor-driven)
+    predicted_ms: float  # the prediction that justified a prefetch
+    future: Future  # the wall-clock device staging task
+
+
+@dataclass
+class LoadRecord:
+    """A committed load, kept until its first admission claims it."""
+    app: str
+    bits: int
+    load_ms: float
+    t_enqueue_ms: float
+    t_ready_ms: float
+    demand: bool
+    overlap_ms: float = 0.0  # other tenants' execution inside the window
+
+
+class BackgroundLoader:
+    """Stages tenant weights to the device off the engine's hot path.
+
+    ``stage_fn(app, variant_or_None)`` performs the physical move (the
+    serving runtime passes ``TenantRuntime.set_variant``); accounting-only
+    tests can omit it and exercise the charge lifecycle alone.
+    """
+
+    def __init__(self, manager, stage_fn: Optional[
+            Callable[[str, Optional[ModelVariant]], None]] = None):
+        self.manager = manager
+        self._stage_fn = stage_fn or (lambda app, variant: None)
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="model-loader")
+        self.inflight: Dict[str, InflightLoad] = {}
+        self._committed: Dict[str, LoadRecord] = {}
+        self.history: List[LoadRecord] = []
+        self.on_event: Optional[LoadEventHook] = None
+        # Counters surfaced through engine/server stats.
+        self.prefetch_hits = 0  # predictor-staged load served warm
+        self.prefetch_wasted = 0  # cancelled before any request used it
+        self.demand_loads = 0  # cold admits staged off the loop instead
+        self.loads_committed = 0
+        self.load_overlap_ms = 0.0
+
+    # -- physical staging channel ---------------------------------------
+    def stage(self, app: str, variant: Optional[ModelVariant]) -> Future:
+        """Queue a physical weight move on the single worker.  All device
+        mutations go through here so they serialize in submission order."""
+        return self._pool.submit(self._stage_fn, app, variant)
+
+    def stage_sync(self, app: str, variant: Optional[ModelVariant]) -> None:
+        """Hot-path (admission) staging: same channel, but wait for it."""
+        self.stage(app, variant).result()
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    # -- load lifecycle --------------------------------------------------
+    def _emit(self, t_ms: float, kind: str, app: str, mb: float) -> None:
+        if self.on_event is not None:
+            self.on_event(t_ms, kind, app, mb)
+
+    def enqueue(self, plan: ProcurePlan, now_ms: float, *,
+                demand: bool = False,
+                predicted_ms: float = INF) -> Optional[InflightLoad]:
+        """Start a background load for ``plan.app``'s chosen variant.
+
+        The plan's evictions are enacted in the accounting immediately
+        (their physical downgrades ride the same worker queue), and the
+        load's *additional* footprint over the currently loaded variant
+        is reserved as an in-flight charge.  Returns None when there is
+        nothing to do (already in flight / already resident / the plan
+        would not grow the tenant / the plan went stale).
+        """
+        if plan is None or plan.variant is None:
+            return None
+        app, variant = plan.app, plan.variant
+        if app in self.inflight:
+            return None
+        state = self.manager.state
+        t = state.tenants[app]
+        if t.loaded is not None and variant.size_mb <= t.loaded.size_mb:
+            return None  # downgrades are admission-time decisions
+        for ev in plan.evictions:
+            state.load(ev.app, ev.new)
+            self.stage(ev.app, ev.new)
+        charge = variant.size_mb - (t.loaded.size_mb if t.loaded else 0.0)
+        if state.free_mb < charge - 1e-9:
+            return None  # plan went stale between planning and enqueue
+        state.reserve_inflight(app, charge)
+        ld = InflightLoad(
+            app=app, variant=variant, t_enqueue_ms=now_ms,
+            ready_ms=now_ms + variant.load_ms, charge_mb=charge,
+            demand=demand, predicted_ms=predicted_ms,
+            future=self.stage(app, variant))
+        self.inflight[app] = ld
+        if demand:
+            self.demand_loads += 1
+        self._emit(now_ms, "demand" if demand else "prefetch", app, charge)
+        return ld
+
+    def earliest_ready(self) -> float:
+        return min((ld.ready_ms for ld in self.inflight.values()),
+                   default=INF)
+
+    def reap(self, now_ms: float) -> List[LoadRecord]:
+        """Commit every load whose virtual completion has passed: release
+        the in-flight charge and charge the variant as loaded weights (a
+        net zero on ``free_mb``, so commits never trip the budget).  The
+        wall-clock staging is awaited here — the virtual clock says the
+        transfer is done, so any real lag is absorbed now, off the other
+        tenants' critical path."""
+        out = []
+        state = self.manager.state
+        for app in [a for a, ld in self.inflight.items()
+                    if ld.ready_ms <= now_ms]:
+            ld = self.inflight.pop(app)
+            ld.future.result()
+            state.release_inflight(app, ld.charge_mb)
+            state.load(app, ld.variant)
+            rec = LoadRecord(
+                app=app, bits=ld.variant.bits,
+                load_ms=ld.variant.load_ms,
+                t_enqueue_ms=ld.t_enqueue_ms, t_ready_ms=ld.ready_ms,
+                demand=ld.demand)
+            self._committed[app] = rec
+            self.history.append(rec)
+            self.loads_committed += 1
+            self._emit(ld.ready_ms, "load", app, ld.variant.size_mb)
+            out.append(rec)
+        return out
+
+    def peek_use(self, app: str) -> Optional[LoadRecord]:
+        """The committed-but-unused load the next admission will consume."""
+        return self._committed.get(app)
+
+    def take_use(self, app: str, warm: bool) -> Optional[LoadRecord]:
+        """An admission for ``app`` succeeded: claim its pending commit.
+        A predictor-staged load that serves warm is the payoff the whole
+        pipeline exists for — count it."""
+        rec = self._committed.pop(app, None)
+        if rec is not None and warm and not rec.demand:
+            self.prefetch_hits += 1
+        return rec
+
+    def cancel(self, app: str, now_ms: float) -> Optional[InflightLoad]:
+        """The predictor was wrong (or the caller changed its mind):
+        release the in-flight charge and restore the device to what the
+        accounting says is loaded, in case the staging already ran."""
+        ld = self.inflight.pop(app, None)
+        if ld is None:
+            return None
+        state = self.manager.state
+        state.release_inflight(app, ld.charge_mb)
+        self.prefetch_wasted += 1
+        if not ld.future.cancel():
+            # The worker already staged (or is staging) the new variant:
+            # queue a restore so device contents match the accounting.
+            self.stage(app, state.tenants[app].loaded)
+        self._emit(now_ms, "cancel", app, -ld.charge_mb)
+        return ld
+
+    def cancel_stale(self, now_ms: float, delta_ms: float,
+                     has_queued: Callable[[str], bool]) -> int:
+        """Cancel predictor-driven prefetches whose predicted request
+        window has fully passed with no request in sight — the in-flight
+        memory goes back to the pool instead of squatting on a wrong
+        guess.  Demand loads are never stale (a batch is waiting)."""
+        stale = [a for a, ld in self.inflight.items()
+                 if not ld.demand and not has_queued(a)
+                 and now_ms > ld.predicted_ms + delta_ms]
+        for app in stale:
+            self.cancel(app, now_ms)
+        return len(stale)

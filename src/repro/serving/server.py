@@ -10,10 +10,10 @@ loaded (quantized variants run through the fused dequant matmul path).
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,33 @@ from repro.models.config import ModelConfig
 from repro.quant.quantize import params_nbytes, quantize_params
 
 MB = 1024 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "max_len"))
+def _generate_tokens(cfg: ModelConfig, params, prompts: jnp.ndarray, *,
+                     max_new: int, max_len: int) -> jnp.ndarray:
+    """Fused greedy decode: prefill + ``max_new − 1`` scanned decode
+    steps in one XLA program (cache shapes are static — prefill pads to
+    ``max_len``), so serving cost is one dispatch per batch instead of
+    hundreds of eager ops per token."""
+    logits, cache = T.prefill(cfg, params, {"tokens": prompts},
+                              max_len=max_len)
+    tok = T.greedy_token(cfg, logits)
+
+    def step(carry, _):
+        prev, c = carry
+        lg, c2 = T.decode_step(cfg, params, c, prev)
+        # Keep the carry type stable: some archs (Mamba conv state)
+        # decode in f32 while prefill emits the storage dtype.
+        c2 = jax.tree.map(lambda new, old: new.astype(old.dtype), c2, c)
+        nxt = T.greedy_token(cfg, lg)
+        return (nxt, c2), nxt
+
+    if max_new == 1:
+        return tok[:, None]
+    _, rest = jax.lax.scan(step, (tok, cache), None, length=max_new - 1)
+    return jnp.concatenate([tok[:, None], jnp.moveaxis(rest, 0, 1)],
+                           axis=1)
 
 
 @dataclass
@@ -81,13 +108,22 @@ class TenantRuntime:
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  extra: Optional[dict] = None) -> np.ndarray:
-        """Greedy-decode ``max_new`` tokens for a batch of prompts."""
+        """Greedy-decode ``max_new`` tokens for a batch of prompts.
+
+        The no-extras path runs one fused, jitted prefill+scan-decode —
+        the seed's eager per-op dispatch made every batch cost seconds
+        on CPU, which both swamped the serving benchmark and hid the
+        load/infer asymmetry the framework exists to exploit.  Batches
+        with extra modality inputs keep the eager path."""
         assert self.device_params is not None, f"{self.name}: not loaded"
         cfg, params = self.cfg, self.device_params
-        batch = {"tokens": jnp.asarray(prompts)}
-        if extra:
-            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         S = prompts.shape[1]
+        if not extra:
+            return np.asarray(_generate_tokens(
+                cfg, params, jnp.asarray(prompts), max_new=max_new,
+                max_len=S + max_new))
+        batch = {"tokens": jnp.asarray(prompts)}
+        batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         logits, cache = T.prefill(cfg, params, batch, max_len=S + max_new)
         toks = [T.greedy_token(cfg, logits)]
         for _ in range(max_new - 1):
@@ -106,13 +142,16 @@ class MultiTenantServer:
 
     def __init__(self, budget_mb: float, policy: str = "iws-bfe",
                  delta_ms: float = 500.0, straggler_deadline_s: float = 30.0,
-                 max_batch: int = 8, batch_window_ms: float = 0.0):
+                 max_batch: int = 8, batch_window_ms: float = 0.0,
+                 prefetch: bool = True):
         self.tenants: Dict[str, TenantRuntime] = {}
         self.budget_mb = budget_mb
         self.policy = policy
         self.delta_ms = delta_ms
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
+        self.loader = None  # type: Optional["BackgroundLoader"]
+        self.prefetch = prefetch
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
         self.straggler_deadline_s = straggler_deadline_s
@@ -136,28 +175,90 @@ class MultiTenantServer:
 
     def start(self) -> None:
         from repro.serving.engine import ServingEngine
+        from repro.serving.loader import BackgroundLoader
 
         zoos = {n: t.zoo for n, t in self.tenants.items()}
 
-        def loader(app: str, variant: Optional[ModelVariant]) -> None:
+        def stage(app: str, variant: Optional[ModelVariant]) -> None:
             self.tenants[app].set_variant(variant)
+
+        def loader_cb(app: str, variant: Optional[ModelVariant]) -> None:
+            # Synchronous (admission-path) weight moves ride the same
+            # single-worker staging channel as background loads, so
+            # device mutations land in the order their accounting did.
+            if self.loader is not None:
+                self.loader.stage_sync(app, variant)
+            else:
+                stage(app, variant)
 
         self.manager = EdgeMultiAI(
             zoos, self.budget_mb, policy=self.policy,
-            delta_ms=self.delta_ms, loader=loader)
+            delta_ms=self.delta_ms, loader=loader_cb)
+        self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
+                       if self.prefetch else None)
         self.engine = ServingEngine(
             self, max_batch=self.max_batch,
-            batch_window_ms=self.batch_window_ms)
+            batch_window_ms=self.batch_window_ms, loader=self.loader)
+
+    def close(self) -> None:
+        """Drain and shut down the background staging worker."""
+        if self.loader is not None:
+            self.loader.close()
 
     # ------------------------------------------------------------------
     def predict_and_preload(self, now_ms: float) -> None:
-        """Drive the RNN request predictors -> proactive loads."""
+        """Drive the RNN request predictors -> proactive loads.
+
+        With the background loader attached, predicted-next tenants get
+        their iWS-BFE-chosen variant *enqueued* for staging instead of
+        loaded on the caller's thread, and prefetches whose predicted
+        window expired without a request are cancelled (releasing their
+        in-flight memory claim).  Without a loader this is the PR-1
+        synchronous proactive load."""
         for name, tr in self.tenants.items():
             t_pred = tr.predictor.predict_next_time()
             self.manager.set_prediction(name, t_pred)
             theta = tr.zoo.largest.load_ms
-            if t_pred - self.delta_ms - theta <= now_ms:
-                self.manager.proactive_load(name, now_ms)
+            in_window = (t_pred - self.delta_ms - theta <= now_ms
+                         <= t_pred + self.delta_ms)
+            if self.loader is None:
+                if t_pred - self.delta_ms - theta <= now_ms:
+                    self.manager.proactive_load(name, now_ms)
+            elif in_window:
+                # Only prefetch inside the predicted window: past its
+                # far edge the prediction is already wrong, and a stale-
+                # cancelled prefetch must not immediately re-enqueue.
+                if (self.engine is None
+                        or self.engine.batcher.queued(name) == 0):
+                    # A tenant with requests already queued is not a
+                    # prefetch target — its load is demand-triggered
+                    # (the engine stages it and admits the batch cold);
+                    # calling it a prefetch would count a request that
+                    # waited out the transfer as a warm start.
+                    plan = self.manager.plan_prefetch(name, now_ms)
+                    if plan is not None:
+                        self.loader.enqueue(plan, now_ms,
+                                            predicted_ms=t_pred)
+        if self.loader is not None and self.engine is not None:
+            self.loader.cancel_stale(
+                now_ms, self.delta_ms,
+                has_queued=lambda a: self.engine.batcher.queued(a) > 0)
+
+    def next_prefetch_trigger(self, now_ms: float) -> float:
+        """Earliest *future* t_pred − Δ − θ across tenants that could use
+        a proactive load: the engine's idle path wakes here, otherwise a
+        drained queue would sleep straight through its prefetch window
+        and every load would degenerate to demand-time."""
+        out = float("inf")
+        for name, tr in self.tenants.items():
+            t = self.manager.state.tenants[name]
+            if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
+                continue
+            trig = (tr.predictor.predict_next_time() - self.delta_ms
+                    - tr.zoo.largest.load_ms)
+            if now_ms < trig < out:
+                out = trig
+        return out
 
     def serve(self, app: str, prompts: np.ndarray, max_new: int = 8,
               now_ms: Optional[float] = None,
@@ -229,6 +330,8 @@ class MultiTenantServer:
             "kv_rejections": eng["kv_rejections"],
             "weight_failures": eng["weight_failures"],
         }
-        if "requests_per_sec" in eng:
-            out["requests_per_sec"] = eng["requests_per_sec"]
+        for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
+                    "demand_loads", "loads_committed", "load_overlap_ms"):
+            if key in eng:
+                out[key] = eng[key]
         return out

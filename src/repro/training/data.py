@@ -9,9 +9,8 @@ required for checkpoint/restart to be exactly reproducible).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -6,9 +6,8 @@ State is a plain pytree so it checkpoints/reshards like everything else.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +72,8 @@ class AdamW:
 
 def global_norm(tree: PyTree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def warmup_cosine(peak_lr: float, warmup: int, total: int,

@@ -7,7 +7,6 @@ pure-pytree TrainState that checkpoints/reshards transparently.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -4,7 +4,6 @@ The property section uses ``hypothesis`` when available; without it the
 same invariant checker runs over a seeded parameter grid so the module
 always collects and the invariants stay guarded.
 """
-import math
 
 import numpy as np
 import pytest
@@ -15,7 +14,7 @@ try:
 except ImportError:  # degrade to the seeded fallback below
     HAVE_HYPOTHESIS = False
 
-from repro.configs.paper_edge import DEFAULT_MEMORY_MB, paper_zoos
+from repro.configs.paper_edge import paper_zoos
 from repro.core import (EdgeMultiAI, generate_workload, simulate,
                         sweep_policies)
 

@@ -19,7 +19,7 @@ from repro.distributed.compression import CompressionState, compress_grads
 from repro.distributed.fault_tolerance import (FailureInjector, NodeFailure,
                                                run_supervised)
 from repro.training.data import DataConfig, SyntheticStream
-from repro.training.optim import AdamW, global_norm, warmup_cosine
+from repro.training.optim import AdamW, warmup_cosine
 from repro.training.train_step import init_state, make_train_step
 
 
@@ -81,8 +81,9 @@ class TestFaultTolerance:
         state = init_state(cfg, jax.random.key(0), opt)
         ds = SyntheticStream(DataConfig(vocab_size=cfg.vocab_size,
                                         seq_len=32, global_batch=4))
-        batch_fn = lambda s: {k: jnp.asarray(v)
-                              for k, v in ds.batch_at(s).items()}
+        def batch_fn(s):
+            return {k: jnp.asarray(v)
+                    for k, v in ds.batch_at(s).items()}
         return state, step_fn, batch_fn
 
     def test_recovery_bitwise_identical(self):

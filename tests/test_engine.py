@@ -99,7 +99,8 @@ def test_kv_released_when_executor_raises(cfgs):
 def test_kv_sized_from_real_cache_pytree(cfgs):
     cfg = cfgs[TENANTS[0]]
     cache = T.init_cache(cfg, 2, 10)
-    nbytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(cache))
+    nbytes = sum(np.asarray(leaf).nbytes
+                 for leaf in jax.tree.leaves(cache))
     assert kv_cache_mb(cfg, 2, 10) == pytest.approx(nbytes / (1024 * 1024))
 
 

@@ -4,7 +4,6 @@ The property section uses ``hypothesis`` when available; without it the
 same invariant checkers run over seeded-numpy random states so the module
 always collects and the invariants stay guarded.
 """
-import math
 
 import numpy as np
 import pytest

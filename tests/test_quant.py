@@ -52,7 +52,8 @@ def test_fidelity_ordering(setup):
     """Paper observation (C): lower precision -> lower accuracy. int8
     stays close to the reference; int4 degrades substantially."""
     cfg, params, batch = setup
-    fwd = lambda c, p, b: T.forward(c, p, b)[..., 0, :]
+    def fwd(c, p, b):
+        return T.forward(c, p, b)[..., 0, :]
     q8 = quantize_params(params, bits=8, group=32)
     q4 = quantize_params(params, bits=4, group=32)
     f8 = fidelity(cfg, params, q8, batch, fwd)

@@ -1,7 +1,6 @@
 """Sharding-rule correctness (pure spec generation — no devices needed)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -3,7 +3,6 @@ training end-to-end with faults, and the public API surface."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.configs.paper_edge import paper_zoos
@@ -14,7 +13,7 @@ from repro.serving import MultiTenantServer, kv_cache_mb
 
 def test_public_api_importable():
     import repro.core as core
-    import repro.kernels.ops as ops
+    import repro.kernels.ops as ops  # noqa: F401
     import repro.quant.quantize  # noqa: F401
     import repro.serving  # noqa: F401
     import repro.training.train_step  # noqa: F401
