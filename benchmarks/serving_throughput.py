@@ -4,18 +4,21 @@ memory contention (the system-level Table I analogue, now end-to-end).
 Drives the event-driven :class:`ServingEngine` through its asyncio entry
 point with a Poisson per-tenant trace (the simulator's arrival process),
 real prefill/decode on reduced configs, and KV caches charged against the
-Edge-MultiAI budget.  XLA compiles are pre-warmed outside the timed trace
-(fixed prompt length bounds the shape set), so the virtual clock sees
-steady-state service times and the trace runs *unsaturated* — which is
-what gives the prefetch pipeline actual idle windows to hide loads in,
-exactly the regime the paper's proactive loading targets.
+Edge-MultiAI budget.  The whole stack is constructed declaratively —
+``EdgeServer.build(ServingConfig(...))`` — so this file states *what* is
+being measured and owns none of the wiring.  XLA compiles are pre-warmed
+outside the timed trace (fixed prompt length bounds the shape set), so
+the virtual clock sees steady-state service times and the trace runs
+*unsaturated* — which is what gives the prefetch pipeline actual idle
+windows to hide loads in, exactly the regime the paper's proactive
+loading targets.
 
 Serving runs under **BFE** (the paper's unload-based eviction): every
 cold procure may fully evict an idle tenant, so the warm-start ratio
 isolates what prefetching itself contributes — iWS-BFE's reactive
 downgrade-instead-of-unload machinery already warm-starts without any
 prefetcher (that effect is measured by the fig5 simulator benchmark),
-which would mask the pipeline under test here.  Both engines run over
+which would mask the pipeline under test here.  Three engines run over
 the *same* trace:
 
 * **prefetch** — the background loading pipeline: predicted-next tenants
@@ -26,6 +29,11 @@ the *same* trace:
   also fired synchronous proactive loads between batches, but those
   were *uncharged* in virtual time — an infinitely fast loader — so
   they are excluded from the baseline rather than reproduced.)
+* **batch-aware** — the prefetch engine under the ``batch-bfe`` Policy
+  plugin: demand loads planned against the full-batch cache bound
+  instead of the head-batch snapshot (the A/B for queue-depth-aware
+  procurement; compare its ``kv_downgrades`` against the head-batch
+  run's).
 
 Reports requests/sec and per-tenant p50/p95/p99 for the prefetch engine,
 plus the head-to-head ``serving/warm_ratio`` and the measured
@@ -36,26 +44,22 @@ plus the head-to-head ``serving/warm_ratio`` and the measured
 import asyncio
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import get_config
-from repro.models import transformer as T
-from repro.serving import (MultiTenantServer, kv_cache_mb,
-                           poisson_trace)
+from repro.serving import poisson_trace
+from repro.serving.api import (BatchingSpec, EdgeServer, LoaderSpec,
+                               ServingConfig, TenantSpec)
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 PROMPT_LEN = 8
 MAX_NEW = 4
 
 
-def _warm_compile(srv: MultiTenantServer,
-                  batch_sizes=(1, 2, 3, 4)) -> None:
+def _warm_compile(srv: EdgeServer, batch_sizes=(1, 2, 3, 4)) -> None:
     """Trace every (tenant, precision, batch) prefill/decode shape the
     run can hit, so compile time stays out of the measured service
-    (the jit cache is process-global: the second engine run hits it)."""
+    (the jit cache is process-global: later engine runs hit it)."""
     for tr in srv.tenants.values():
         for bits in tr.host:
             tr.set_variant(tr.zoo.by_bits(bits))
@@ -64,24 +68,20 @@ def _warm_compile(srv: MultiTenantServer,
         tr.set_variant(None)  # leave residency to the manager
 
 
-def _run_engine(prefetch: bool):
+def _run_engine(prefetch: bool, policy: str = "bfe"):
     """One full engine run over the default Poisson trace."""
-    srv = MultiTenantServer(budget_mb=1.0, policy="bfe",
-                            delta_ms=750.0, max_batch=4,
-                            batch_window_ms=50.0, prefetch=prefetch)
-    cfgs = {}
-    for n in TENANTS:
-        cfg = get_config(n, reduced=True)
-        cfgs[n] = cfg
-        srv.register(n, cfg, T.init_params(cfg, jax.random.key(2),
-                                           jnp.float32))
-    # Contended: all-bf16 residency impossible, so BFE keeps evicting.
-    kv = max(kv_cache_mb(c, 2, PROMPT_LEN + MAX_NEW)
-             for c in cfgs.values())
-    srv.budget_mb = srv.contention_budget(kv)
-    srv.start()
+    srv = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in TENANTS),
+        policy=policy,
+        delta_ms=750.0,
+        batching=BatchingSpec(max_batch=4, window_ms=50.0),
+        loader=LoaderSpec(prefetch=prefetch),
+        # Contended: all-bf16 residency impossible, so BFE keeps
+        # evicting; headroom sized to the largest admitted decode cache.
+        kv_headroom_shape=(2, PROMPT_LEN + MAX_NEW)))
     _warm_compile(srv)
 
+    cfgs = {t.name: t.cfg for t in srv.tenants.values()}
     trace, _ = poisson_trace(
         cfgs, requests_per_app=12, mean_iat_ms=1000.0, deviation=0.3,
         seed=0, prompt_len=(PROMPT_LEN, PROMPT_LEN + 1), max_new=MAX_NEW)
@@ -96,6 +96,7 @@ def _run_engine(prefetch: bool):
 def run() -> None:
     srv, stats, wall_s = _run_engine(prefetch=True)
     _, reactive, _ = _run_engine(prefetch=False)
+    _, batch_aware, _ = _run_engine(prefetch=True, policy="batch-bfe")
 
     emit("serving/requests_per_sec", stats.get("requests_per_sec", 0.0),
          f"n={stats['requests']} wall={wall_s:.1f}s "
@@ -110,6 +111,15 @@ def run() -> None:
          f"loads_committed={stats['loads_committed']} "
          f"reactive_warm={reactive['warm_ratio']:.3f} "
          f"prefetch_warm={stats['warm_ratio']:.3f}")
+    # The batch-aware A/B: same trace, same prefetch pipeline, demand
+    # loads planned over the full-batch cache bound.  Fewer self-
+    # downgrades (thrash) at equal-or-better warm ratio is the win.
+    emit("serving/batch_aware/warm_ratio", batch_aware["warm_ratio"],
+         f"head_warm={stats['warm_ratio']:.3f} "
+         f"kv_downgrades={batch_aware['kv_downgrades']} "
+         f"head_kv_downgrades={stats['kv_downgrades']} "
+         f"demand_loads={batch_aware['demand_loads']} "
+         f"prediction_hit_rate={batch_aware['prediction_hit_rate']:.3f}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

@@ -13,34 +13,33 @@ BackgroundLoader (watch the ``prefetch``/``load``/``cancel`` events in
 the log), cold tenants' demand loads overlap other tenants' execution,
 and in-flight loads claim budget so nothing double-books them.
 
+The entire stack comes up from one declarative config —
+``EdgeServer.build(ServingConfig(...))`` — which registers the tenants,
+installs the predictors, derives the contended budget, resolves the
+policy through the registry, and attaches the loader + engine.
+
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.models import transformer as T
-from repro.serving import MultiTenantServer, kv_cache_mb, poisson_trace
+from repro.serving import poisson_trace
+from repro.serving.api import (BatchingSpec, EdgeServer, ServingConfig,
+                               TenantSpec)
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 
-server = MultiTenantServer(budget_mb=1e9, policy="iws-bfe",
-                           delta_ms=1500.0, max_batch=4,
-                           batch_window_ms=100.0)
+server = EdgeServer.build(ServingConfig(
+    tenants=tuple(TenantSpec(n) for n in TENANTS),
+    policy="iws-bfe",
+    delta_ms=1500.0,
+    batching=BatchingSpec(max_batch=4, window_ms=100.0),
+    # budget_mb=None derives the standard contended budget, with
+    # headroom for the largest decode cache this trace admits.
+    kv_headroom_shape=(4, 12 + 6)))
 cfgs = {}
 for name in TENANTS:
-    cfg = get_config(name, reduced=True)
-    params = T.init_params(cfg, jax.random.key(hash(name) % 2 ** 31),
-                           jnp.float32)
-    server.register(name, cfg, params)
-    cfgs[name] = cfg
+    cfgs[name] = server.tenants[name].cfg
     zoo = server.tenants[name].zoo
     print(f"tenant {name:16s} zoo: " + "  ".join(
         f"{v.bits}bit={v.size_mb:.2f}MB" for v in zoo.variants))
-kv = max(kv_cache_mb(c, server.max_batch, 12 + 6) for c in cfgs.values())
-server.budget_mb = server.contention_budget(kv)
-server.start()
 print(f"budget: {server.budget_mb:.2f} MB — forces contention\n")
 
 trace, wl = poisson_trace(cfgs, requests_per_app=8, mean_iat_ms=800.0,
@@ -65,6 +64,8 @@ print(f"prefetch pipeline: hits={stats['prefetch_hits']} "
       f"demand_loads={stats['demand_loads']} "
       f"loads_committed={stats['loads_committed']} "
       f"load_overlap={stats['load_overlap_ms']:.1f}ms")
+print(f"predictors: window_hit_rate={stats['prediction_hit_rate']:.2f} "
+      f"background_fits_scheduled={stats['fits_scheduled']}")
 for app, s in stats["per_tenant"].items():
     print(f"  {app:16s} n={s['requests']:3d} warm={s['warm_ratio']:.2f} "
           f"fail={s['fail_ratio']:.2f} p50={s['p50_ms']:7.0f}ms "
@@ -73,3 +74,4 @@ for app, s in stats["per_tenant"].items():
 st = server.manager.state
 print(f"final residency: weights={st.weights_mb:.2f}MB kv={st.kv_mb:.2f}MB "
       f"of {st.budget_mb:.2f}MB")
+server.close()

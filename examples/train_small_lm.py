@@ -58,5 +58,5 @@ print(f"\ndone: {report.steps_completed} steps in {dt:.1f}s "
       f"{report.restarts} node failures survived")
 print(f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
 every = max(len(report.losses) // 10, 1)
-print("curve:", " ".join(f"{l:.3f}" for l in report.losses[::every]))
+print("curve:", " ".join(f"{x:.3f}" for x in report.losses[::every]))
 assert report.losses[-1] < report.losses[0], "loss must decrease"

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config
+from repro.configs import get_config
 from repro.models import transformer as T
 from repro.quant.quantize import fidelity, params_nbytes, quantize_params
 
@@ -25,7 +25,8 @@ ap.add_argument("--archs", nargs="+",
 args = ap.parse_args()
 
 key = jax.random.key(0)
-fwd = lambda c, p, b: T.forward(c, p, b)[..., 0, :]
+def fwd(c, p, b):
+    return T.forward(c, p, b)[..., 0, :]
 
 for arch in args.archs:
     cfg = get_config(arch, reduced=True)

@@ -9,7 +9,11 @@ from repro.core.manager import (BatchAdmission, EdgeMultiAI,
                                 InferenceRecord, Metrics)
 from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo, zoo_from_config
-from repro.core.policies import POLICIES, ProcurePlan, kv_headroom_plan
+from repro.core.policies import (POLICIES, BatchAware, DemandContext,
+                                 DesperationFallback, FallbackPolicy,
+                                 Policy, ProcurePlan, available_policies,
+                                 kv_headroom_plan, register_policy,
+                                 resolve_policy)
 from repro.core.predictor import MemoryPredictor, RequestPredictor
 from repro.core.simulator import (SimResult, Workload, generate_workload,
                                   simulate, sweep_policies)
@@ -18,6 +22,9 @@ __all__ = [
     "BatchAdmission", "EdgeMultiAI", "InferenceRecord", "Metrics",
     "MemoryState", "TenantState", "ModelVariant", "ModelZoo",
     "zoo_from_config", "POLICIES", "ProcurePlan", "kv_headroom_plan",
+    "Policy", "BatchAware", "DemandContext", "DesperationFallback",
+    "FallbackPolicy", "available_policies", "register_policy",
+    "resolve_policy",
     "MemoryPredictor", "RequestPredictor", "SimResult", "Workload",
     "generate_workload", "simulate", "sweep_policies",
 ]

@@ -17,8 +17,9 @@ from typing import Callable, Dict, List, Optional
 
 from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
-from repro.core.policies import (POLICIES, ProcurePlan, kv_desperation_plan,
-                                 kv_headroom_plan)
+from repro.core.policies import (DemandContext, FallbackPolicy, Policy,
+                                 PolicyLike, ProcurePlan, resolve_fallback,
+                                 resolve_policy)
 
 # Inference time is load_ms/12 by default: the 8–17× load/infer asymmetry
 # measured in the paper's Table I (midpoint), which is what makes
@@ -59,17 +60,26 @@ class EdgeMultiAI:
         self,
         zoos: Dict[str, ModelZoo],
         budget_mb: float,
-        policy: str = "iws-bfe",
+        policy: PolicyLike = "iws-bfe",
         delta_ms: float = 500.0,
         history_ms: float = 3000.0,
         loader: Optional[Callable[[str, Optional[ModelVariant]], None]] = None,
+        fallback: "FallbackPolicy | str | None" = "desperation",
     ):
         self.state = MemoryState(
             budget_mb=budget_mb,
             tenants={a: TenantState(zoo=z) for a, z in zoos.items()})
-        if policy not in POLICIES and policy != "none":
-            raise KeyError(f"unknown policy {policy!r}")
-        self.policy_name = policy
+        # ``policy`` resolves through the registry: a name, a Policy class,
+        # or a ready instance; "none" (the paper's unmanaged baseline)
+        # disables procurement entirely.
+        self.policy: Optional[Policy] = (
+            None if policy == "none" else resolve_policy(policy))
+        self.policy_name = (policy if isinstance(policy, str)
+                            else self.policy.name)
+        # What backstops an unfundable plan in the serving runtime; the
+        # unmanaged baseline has no eviction authority, so no fallback.
+        self.fallback: Optional[FallbackPolicy] = (
+            None if self.policy is None else resolve_fallback(fallback))
         self.delta = delta_ms
         self.history = history_ms
         self.records: List[InferenceRecord] = []
@@ -87,9 +97,9 @@ class EdgeMultiAI:
             self._loader(plan.app, plan.variant)
 
     def _procure(self, app: str, now: float) -> ProcurePlan:
-        fn = POLICIES[self.policy_name]
-        return fn(self.state, app, now, delta=self.delta,
-                  history=self.history)
+        return self.policy.plan_procure(self.state, app, now,
+                                        delta=self.delta,
+                                        history=self.history)
 
     # ------------------------------------------------------------------
     def set_prediction(self, app: str, t_pred: float) -> None:
@@ -101,7 +111,7 @@ class EdgeMultiAI:
         serving runtime routes the returned plan to the background loader
         so the weight transfer happens off the hot path; the simulator
         keeps the synchronous :meth:`proactive_load` wrapper."""
-        if self.policy_name == "none":
+        if self.policy is None:
             return None
         t = self.state.tenants[app]
         if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
@@ -117,63 +127,64 @@ class EdgeMultiAI:
             self._enact(plan)
 
     def plan_prefetch(self, app: str, now: float) -> Optional[ProcurePlan]:
-        """Eviction-free proactive plan for the background loader: the
-        largest variant whose *marginal* footprint fits in surplus
-        memory.  A prefetch is speculation — it must never destabilize
-        residents or out-claim real work, so unlike :meth:`plan_proactive`
-        it refuses plans that need evictions (under pressure the demand
-        path, which can reclaim a cancelled prefetch's memory, takes
-        over)."""
-        if self.policy_name == "none":
+        """Speculative plan for the background loader — delegated to the
+        policy's ``plan_prefetch`` hook (default: eviction-free,
+        surplus-only; see :class:`~repro.core.policies.Policy`)."""
+        if self.policy is None:
             return None
-        t = self.state.tenants[app]
-        if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
-            return None
-        cur = t.loaded.size_mb if t.loaded else 0.0
-        for v in t.zoo.variants:  # largest first
-            if t.loaded is not None and v.size_mb <= cur:
-                break  # downgrades are admission-time decisions
-            if v.size_mb - cur <= self.state.free_mb:
-                return ProcurePlan(app, v, ())
-        return None
+        return self.policy.plan_prefetch(self.state, app, now,
+                                         delta=self.delta,
+                                         history=self.history)
 
-    def plan_demand(self, app: str, now: float,
-                    kv_mb: float = 0.0) -> Optional[ProcurePlan]:
+    def plan_demand(self, app: str, now: float, kv_mb: float = 0.0,
+                    demand: Optional[DemandContext] = None
+                    ) -> Optional[ProcurePlan]:
         """Plan a load for a *cold* tenant with requests already queued,
         for the background loader: the engine stages the weights off the
         loop and keeps serving other tenants instead of blocking inside
-        the admit path.  ``kv_mb`` is the waiting batch's expected cache
-        need, staged as a pending planning charge so the chosen variant
-        leaves room for it (no load-then-downgrade thrash at admission).
-        Returns None when the tenant is already resident/mid-staging or
-        no variant fits (admission will then record the counted failure).
+        the admit path.  ``demand`` carries the waiting queue's cache
+        needs (head batch and full-queue bound); the policy's
+        ``plan_demand`` hook stages its chosen charge as a pending
+        planning reservation so the variant leaves room for the cache
+        (no load-then-downgrade thrash at admission).  ``kv_mb`` is the
+        pre-protocol shorthand for a head-batch-only context.  Returns
+        None when the tenant is already resident/mid-staging or no
+        variant fits (admission will then record the counted failure).
         """
-        if self.policy_name == "none":
+        if self.policy is None:
             return None
         t = self.state.tenants[app]
         if t.loaded is not None or t.inflight_mb > 0.0:
             return None
-        self.state.pending_mb += kv_mb
-        try:
-            plan = self._procure(app, now)
-            if not plan.ok:
-                # Serving never fails what desperation can fund: free the
-                # smallest variant's footprint ignoring window/history
-                # protections, then load exactly that — a maximalist
-                # re-procure here would snowball the evictions it just
-                # forced into an even bigger claim.  (Desperation is
-                # enacted, not planned: the policies are pure over the
-                # *current* state.)
+        if demand is None:
+            demand = DemandContext(kv_head_mb=kv_mb, kv_full_mb=kv_mb,
+                                   queue_depth=1, max_batch=1)
+        plan = self.policy.plan_demand(self.state, app, now, demand,
+                                       delta=self.delta,
+                                       history=self.history)
+        if plan is None and self.fallback is not None:
+            # Serving never fails what the fallback can fund: free the
+            # smallest variant's footprint ignoring window/history
+            # protections, then load exactly that — a maximalist
+            # re-procure here would snowball the evictions it just
+            # forced into an even bigger claim.  (The fallback is
+            # enacted, not planned: the policies are pure over the
+            # *current* state.)
+            charge = self.policy.demand_charge(demand)
+            self.state.pending_mb += charge
+            try:
                 self._desperate_evict(app, t.zoo.smallest.size_mb)
                 if self.state.free_mb >= t.zoo.smallest.size_mb:
                     plan = ProcurePlan(app, t.zoo.smallest)
-        finally:
-            self.state.pending_mb -= kv_mb
-        return plan if plan.ok else None
+            finally:
+                self.state.pending_mb -= charge
+        return plan if plan is not None and plan.ok else None
 
     def _desperate_evict(self, app: str, need_mb: float) -> None:
-        """Enact a :func:`kv_desperation_plan` for ``app``'s need."""
-        for ev in kv_desperation_plan(self.state, app, need_mb):
+        """Enact the fallback policy's evictions for ``app``'s need."""
+        if self.fallback is None:
+            return
+        for ev in self.fallback.plan(self.state, app, need_mb):
             self.state.load(ev.app, ev.new)
             if self._loader:
                 self._loader(ev.app, ev.new)
@@ -194,18 +205,20 @@ class EdgeMultiAI:
             # the load was already fired θ early (proactive), so an upgrade
             # here overlaps the Δ slack; unexpected requests must be served
             # immediately by whatever is resident (the WS mechanism).
-            if expected and self.policy_name != "none" \
+            if expected and self.policy is not None \
                     and variant is not t.zoo.largest:
                 plan = self._procure(app, now)
                 if plan.ok and plan.variant.size_mb > variant.size_mb:
                     self._enact(plan)
                     variant = plan.variant
             latency = variant.load_ms / LOAD_OVER_INFER
-        elif self.policy_name == "none":
+        elif self.policy is None:
             # No framework: on-demand FP32 load, no eviction authority.
             big = t.zoo.largest
             if self.state.free_mb >= big.size_mb:
                 self.state.load(app, big)
+                if self._loader:  # stage real weights too (serving)
+                    self._loader(app, big)
                 variant, warm, failed = big, False, False
                 latency = big.load_ms + big.load_ms / LOAD_OVER_INFER
             else:
@@ -256,7 +269,7 @@ class EdgeMultiAI:
         self.state.pending_mb += kv_mb
         try:
             rec = self.on_request(app, now)
-            if rec.failed and self.policy_name != "none":
+            if rec.failed and self.policy is not None:
                 # The pure policies refuse to unload (iWS-BFE only ever
                 # replaces), but in the serving runtime a failure is
                 # strictly worse than evicting an idle tenant: free the
@@ -279,7 +292,7 @@ class EdgeMultiAI:
             # Attribute the failure: if weights alone would have been
             # procurable without the staged KV need, this is cache
             # pressure, not weight capacity.
-            if self.policy_name == "none":
+            if self.policy is None:
                 kv_rej = self.state.free_mb >= t.zoo.largest.size_mb
             else:
                 kv_rej = kv_mb > 0 and self._procure(app, now).ok
@@ -287,21 +300,21 @@ class EdgeMultiAI:
                 self.kv_rejections += 1
             return BatchAdmission(app, now, 0.0, rec.warm, True, None,
                                   kv_rejected=kv_rej)
-        if self.state.free_mb < kv_mb and self.policy_name != "none":
-            for ev in kv_headroom_plan(self.state, app, now, kv_mb,
-                                       delta=self.delta,
-                                       history=self.history):
+        if self.state.free_mb < kv_mb and self.policy is not None:
+            for ev in self.policy.plan_headroom(self.state, app, now, kv_mb,
+                                                delta=self.delta,
+                                                history=self.history):
                 self.state.load(ev.app, ev.new)
                 if self._loader:
                     self._loader(ev.app, ev.new)
         self_downgraded = False
-        while (self.policy_name != "none" and self.state.free_mb < kv_mb
+        while (self.policy is not None and self.state.free_mb < kv_mb
                and (nxt := t.zoo.next_smaller(t.loaded)) is not None):
             self.state.load(app, nxt)
             if self._loader:
                 self._loader(app, nxt)
             self_downgraded = True
-        if self.state.free_mb < kv_mb and self.policy_name != "none":
+        if self.state.free_mb < kv_mb and self.policy is not None:
             # Desperation: rejecting the batch is the worst outcome, so
             # the window/history protections yield before the cache does.
             self._desperate_evict(app, kv_mb)

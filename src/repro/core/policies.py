@@ -21,12 +21,21 @@ the paper precisely:
   (apps requested during the history window H are not candidates) and a
   Bayesian fitness score (Eq. 3) served from a max-heap:
       Score(A_j) = norm(t_j − now) · [1 − P(r_j | A_i ∈ A*)]
+
+Policies are consumed through the class-based :class:`Policy` protocol
+(``plan_procure`` / ``plan_prefetch`` / ``plan_demand`` / ``victim_filter``
+hooks) and the ``@register_policy`` registry; new policies plug in without
+touching the manager (see :class:`BatchAware` for the first plugin).  The
+bare functions (``lfe``/``bfe``/``ws_bfe``/``iws_bfe``) and the
+string-keyed ``POLICIES`` dict survive only as deprecation shims over the
+registered classes.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Union
+
 
 from repro.core.memory_state import INF, MemoryState
 from repro.core.model_zoo import ModelVariant
@@ -54,6 +63,24 @@ class ProcurePlan:
         return self.variant is not None
 
 
+@dataclass(frozen=True)
+class DemandContext:
+    """What a demand (cold tenant, requests queued) load is planning for.
+
+    ``kv_head_mb`` is the queued head batch's cache need as it looks right
+    now; ``kv_full_mb`` is the cache need of the batch the queue could
+    produce *by admission time* (a full ``max_batch``-wide batch at the
+    queued shapes — under a burst more requests arrive while the weight
+    transfer stages, so the head-batch snapshot undershoots).  The base
+    protocol plans with the head batch; :class:`BatchAware` plans with the
+    full-queue bound.
+    """
+    kv_head_mb: float
+    kv_full_mb: float
+    queue_depth: int
+    max_batch: int
+
+
 def _free_after(state: MemoryState, app: str,
                 evictions: List[Eviction]) -> float:
     """Free memory once evictions are enacted and app's current model (if
@@ -75,60 +102,6 @@ def _windows_overlap(state: MemoryState, a: str, b: str,
     return lo_a <= hi_b and lo_b <= hi_a
 
 
-# ---------------------------------------------------------------------------
-# Policy 1: Largest-First Eviction
-# ---------------------------------------------------------------------------
-def lfe(state: MemoryState, app: str, now: float, *, delta: float,
-        history: float = 0.0) -> ProcurePlan:
-    victims = [a for a in state.minimalist_set(now, delta)
-               if a != app and state.tenants[a].loaded is not None
-               and state.tenants[a].inflight_mb == 0.0]
-    victims.sort(key=lambda a: -state.tenants[a].loaded.size_mb)
-    for variant in state.tenants[app].zoo.variants:
-        evictions: List[Eviction] = []
-        for v in victims:
-            if _free_after(state, app, evictions) >= variant.size_mb:
-                break
-            evictions.append(Eviction(v, state.tenants[v].loaded, None))
-        if _free_after(state, app, evictions) >= variant.size_mb:
-            return ProcurePlan(app, variant, tuple(evictions))
-    return ProcurePlan(app, None)
-
-
-# ---------------------------------------------------------------------------
-# Policy 2: Best-Fit Eviction
-# ---------------------------------------------------------------------------
-def bfe(state: MemoryState, app: str, now: float, *, delta: float,
-        history: float = 0.0) -> ProcurePlan:
-    victims = [a for a in state.minimalist_set(now, delta)
-               if a != app and state.tenants[a].loaded is not None
-               and state.tenants[a].inflight_mb == 0.0]
-    for variant in state.tenants[app].zoo.variants:
-        evictions: List[Eviction] = []
-        remaining = list(victims)
-        while (_free_after(state, app, evictions) < variant.size_mb
-               and remaining):
-            need = variant.size_mb - _free_after(state, app, evictions)
-            # best fit: smallest loaded size that still covers the need;
-            # if none covers it, take the largest available.
-            covering = [a for a in remaining
-                        if state.tenants[a].loaded.size_mb >= need]
-            if covering:
-                pick = min(covering,
-                           key=lambda a: state.tenants[a].loaded.size_mb)
-            else:
-                pick = max(remaining,
-                           key=lambda a: state.tenants[a].loaded.size_mb)
-            remaining.remove(pick)
-            evictions.append(Eviction(pick, state.tenants[pick].loaded, None))
-        if _free_after(state, app, evictions) >= variant.size_mb:
-            return ProcurePlan(app, variant, tuple(evictions))
-    return ProcurePlan(app, None)
-
-
-# ---------------------------------------------------------------------------
-# Policy 3: Warm-Start-aware Best-Fit Eviction
-# ---------------------------------------------------------------------------
 def _downgrade_candidates(state: MemoryState, app: str, now: float,
                           delta: float, *, require_history: float = 0.0,
                           include_smallest: bool = False) -> List[str]:
@@ -175,66 +148,368 @@ def _scavenge_best_fit(state: MemoryState, cands: List[str],
     return evictions
 
 
-def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
-           history: float = 0.0) -> ProcurePlan:
-    cands = _downgrade_candidates(state, app, now, delta)
-    for variant in state.tenants[app].zoo.variants:
-        evictions = _scavenge_best_fit(
-            state, cands,
-            lambda evs: variant.size_mb - _free_after(state, app, evs))
-        if _free_after(state, app, evictions) >= variant.size_mb:
-            return ProcurePlan(app, variant, tuple(evictions))
-        # §III-B-1 "high inference demand" fallback: fully unload the
-        # already-downgraded victims (this is what separates WS-BFE from
-        # iWS-BFE, which per Algorithm 1 only ever *replaces* — WS-BFE's
-        # unloads are the cold-starts Fig 5 charges it with).
-        evictions = [Eviction(e.app, e.old, None) for e in evictions]
-        if _free_after(state, app, evictions) >= variant.size_mb:
-            return ProcurePlan(app, variant, tuple(evictions))
-    return ProcurePlan(app, None)
+# ---------------------------------------------------------------------------
+# Policy protocol + registry
+# ---------------------------------------------------------------------------
+class Policy:
+    """Class-based policy protocol: the manager (and any host runtime)
+    talks to policies exclusively through these four hooks plus the
+    headroom planner.  All hooks are pure over the passed state — a
+    policy never enacts; the manager does.
+
+    * :meth:`victim_filter` — which tenants this policy may evict or
+      downgrade for ``app``'s need (the per-policy candidate rule).
+    * :meth:`plan_procure` — the paper's procurement: choose a variant
+      for ``app`` plus the evictions that fund it.
+    * :meth:`plan_prefetch` — speculative (predictor-driven) plan for a
+      background load; the default is eviction-free surplus-only, since
+      speculation must never destabilize residents.
+    * :meth:`plan_demand` — plan a cold tenant's load with its queued
+      batch's cache need staged as a planning charge (via
+      :class:`DemandContext`); the default charges the head batch.
+    * :meth:`plan_headroom` — scavenge weight memory for a cache that no
+      longer fits beside the resident weights.
+
+    Subclasses registered with :func:`register_policy` resolve by name
+    through :func:`resolve_policy`; instances are stateless, so one
+    instance may serve any number of managers.
+    """
+
+    name: ClassVar[str] = "?"
+
+    # -- hooks -----------------------------------------------------------
+    def victim_filter(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float) -> List[str]:
+        raise NotImplementedError
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        raise NotImplementedError
+
+    def plan_prefetch(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float
+                      ) -> Optional[ProcurePlan]:
+        """Eviction-free proactive plan for the background loader: the
+        largest variant whose *marginal* footprint fits in surplus
+        memory.  A prefetch is speculation — it must never destabilize
+        residents or out-claim real work, so the default refuses plans
+        that need evictions (under pressure the demand path, which can
+        reclaim a cancelled prefetch's memory, takes over)."""
+        t = state.tenants[app]
+        if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
+            return None
+        cur = t.loaded.size_mb if t.loaded else 0.0
+        for v in t.zoo.variants:  # largest first
+            if t.loaded is not None and v.size_mb <= cur:
+                break  # downgrades are admission-time decisions
+            if v.size_mb - cur <= state.free_mb:
+                return ProcurePlan(app, v, ())
+        return None
+
+    def demand_charge(self, demand: DemandContext) -> float:
+        """How much cache need a demand load plans around.  The base
+        protocol charges the head batch as it is queued right now."""
+        return demand.kv_head_mb
+
+    def plan_demand(self, state: MemoryState, app: str, now: float,
+                    demand: DemandContext, *, delta: float,
+                    history: float) -> Optional[ProcurePlan]:
+        """Plan a load for a *cold* tenant with requests already queued.
+        The cache need is staged as a transient planning charge so the
+        chosen variant leaves room for it up front (one weight transfer,
+        no load-then-downgrade thrash at admission).  Returns None when
+        no variant is fundable; the manager's fallback takes over."""
+        charge = self.demand_charge(demand)
+        state.pending_mb += charge
+        try:
+            plan = self.plan_procure(state, app, now, delta=delta,
+                                     history=history)
+        finally:
+            state.pending_mb -= charge
+        return plan if plan.ok else None
+
+    def plan_headroom(self, state: MemoryState, app: str, now: float,
+                      need_mb: float, *, delta: float,
+                      history: float) -> Tuple[Eviction, ...]:
+        return kv_headroom_plan(state, app, now, need_mb, delta=delta,
+                                history=history)
+
+
+PolicyLike = Union[str, Policy, type]
+
+_REGISTRY: Dict[str, Callable[[], Policy]] = {}
+
+
+def register_policy(name: str) -> Callable:
+    """Register a :class:`Policy` factory (usually the class itself) under
+    ``name`` so configs can resolve it declaratively."""
+    def deco(factory):
+        if isinstance(factory, type):
+            factory.name = name
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_policy(spec: PolicyLike) -> Policy:
+    """Resolve a registry name, a Policy class, or a ready instance to a
+    Policy instance.  Unknown names fail loudly with the available set."""
+    if isinstance(spec, Policy):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Policy):
+        return spec()
+    if isinstance(spec, str):
+        if spec not in _REGISTRY:
+            raise KeyError(
+                f"unknown policy {spec!r}; registered policies: "
+                f"{', '.join(available_policies())}")
+        return _REGISTRY[spec]()
+    raise TypeError(f"cannot resolve a Policy from {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# Policy 1: Largest-First Eviction
+# ---------------------------------------------------------------------------
+@register_policy("lfe")
+class LFE(Policy):
+    def victim_filter(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float) -> List[str]:
+        victims = [a for a in state.minimalist_set(now, delta)
+                   if a != app and state.tenants[a].loaded is not None
+                   and state.tenants[a].inflight_mb == 0.0]
+        victims.sort(key=lambda a: -state.tenants[a].loaded.size_mb)
+        return victims
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        victims = self.victim_filter(state, app, now, delta=delta,
+                                     history=history)
+        for variant in state.tenants[app].zoo.variants:
+            evictions: List[Eviction] = []
+            for v in victims:
+                if _free_after(state, app, evictions) >= variant.size_mb:
+                    break
+                evictions.append(Eviction(v, state.tenants[v].loaded, None))
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                return ProcurePlan(app, variant, tuple(evictions))
+        return ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
+# Policy 2: Best-Fit Eviction
+# ---------------------------------------------------------------------------
+@register_policy("bfe")
+class BFE(Policy):
+    def victim_filter(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float) -> List[str]:
+        return [a for a in state.minimalist_set(now, delta)
+                if a != app and state.tenants[a].loaded is not None
+                and state.tenants[a].inflight_mb == 0.0]
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        victims = self.victim_filter(state, app, now, delta=delta,
+                                     history=history)
+        for variant in state.tenants[app].zoo.variants:
+            evictions: List[Eviction] = []
+            remaining = list(victims)
+            while (_free_after(state, app, evictions) < variant.size_mb
+                   and remaining):
+                need = variant.size_mb - _free_after(state, app, evictions)
+                # best fit: smallest loaded size that still covers the
+                # need; if none covers it, take the largest available.
+                covering = [a for a in remaining
+                            if state.tenants[a].loaded.size_mb >= need]
+                if covering:
+                    pick = min(covering,
+                               key=lambda a: state.tenants[a].loaded.size_mb)
+                else:
+                    pick = max(remaining,
+                               key=lambda a: state.tenants[a].loaded.size_mb)
+                remaining.remove(pick)
+                evictions.append(
+                    Eviction(pick, state.tenants[pick].loaded, None))
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                return ProcurePlan(app, variant, tuple(evictions))
+        return ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
+# Policy 3: Warm-Start-aware Best-Fit Eviction
+# ---------------------------------------------------------------------------
+@register_policy("ws-bfe")
+class WSBFE(Policy):
+    def victim_filter(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float) -> List[str]:
+        # Window-overlap exemption only: WS-BFE has no LRU-K filter.
+        return _downgrade_candidates(state, app, now, delta)
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        cands = self.victim_filter(state, app, now, delta=delta,
+                                   history=history)
+        for variant in state.tenants[app].zoo.variants:
+            evictions = _scavenge_best_fit(
+                state, cands,
+                lambda evs: variant.size_mb - _free_after(state, app, evs))
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                return ProcurePlan(app, variant, tuple(evictions))
+            # §III-B-1 "high inference demand" fallback: fully unload the
+            # already-downgraded victims (this is what separates WS-BFE
+            # from iWS-BFE, which per Algorithm 1 only ever *replaces* —
+            # WS-BFE's unloads are the cold-starts Fig 5 charges it with).
+            evictions = [Eviction(e.app, e.old, None) for e in evictions]
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                return ProcurePlan(app, variant, tuple(evictions))
+        return ProcurePlan(app, None)
 
 
 # ---------------------------------------------------------------------------
 # Policy 4: Intelligent Warm-Start-aware Best-Fit Eviction (Algorithm 1)
 # ---------------------------------------------------------------------------
+@register_policy("iws-bfe")
+class IWSBFE(Policy):
+    def victim_filter(self, state: MemoryState, app: str, now: float, *,
+                      delta: float, history: float) -> List[str]:
+        # Steps 2–3: τ = A′ not requested during H; E = τ non-overlapping
+        # with the requester's window.
+        return _downgrade_candidates(state, app, now, delta,
+                                     require_history=history)
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        cands = self.victim_filter(state, app, now, delta=delta,
+                                   history=history)
+        if cands:
+            # Step 4: fitness score (Eq. 3).
+            dists = {}
+            for a in cands:
+                tj = state.tenants[a].predicted_next
+                dists[a] = (tj - now) if tj is not INF else INF
+            finite = [d for d in dists.values() if d is not INF and d > 0]
+            dmax = max(finite) if finite else 1.0
+            scores = {}
+            for a in cands:
+                d = dists[a]
+                norm = 1.0 if d is INF else max(d, 0.0) / max(dmax, 1e-9)
+                scores[a] = norm * (1.0 - state.p_unexpected(a))
+            # Step 5: max-heap on fitness.
+            heap = [(-scores[a], a) for a in cands]
+            heapq.heapify(heap)
+        else:
+            heap = []
+
+        for variant in state.tenants[app].zoo.variants:
+            evictions: List[Eviction] = []
+            h = list(heap)  # fresh heap per variant attempt (Steps 6–18)
+            while _free_after(state, app, evictions) < variant.size_mb and h:
+                _, w = heapq.heappop(h)  # Step 7: extract max-fitness root
+                t = state.tenants[w]
+                # Step 9: scavenge by replacing with the lowest-precision
+                # model.
+                evictions.append(Eviction(w, t.loaded, t.zoo.smallest))
+            if _free_after(state, app, evictions) >= variant.size_mb:
+                # Steps 12–14: enact replacements, load m_i.
+                return ProcurePlan(app, variant, tuple(evictions))
+            # Step 17–18: retry with next smaller model.
+        return ProcurePlan(app, None)  # Step 17: inference request fails
+
+
+# ---------------------------------------------------------------------------
+# Plugin: batch-aware procurement (wraps any registered policy)
+# ---------------------------------------------------------------------------
+class BatchAware(Policy):
+    """Batch-aware demand procurement: plan a cold tenant's load for the
+    batch the queue will produce *at admission time*, not the head-batch
+    snapshot at stage time.
+
+    Under a burst, requests keep arriving while the weight transfer
+    stages; head-batch planning sizes the variant beside the cache of
+    whatever was queued when staging began, and the (now larger) batch
+    that actually admits forces a self-downgrade right after the load
+    commits — the exact load-then-downgrade thrash KV-aware procurement
+    exists to avoid, reintroduced by queue dynamics.  Planning against
+    ``DemandContext.kv_full_mb`` (a full ``max_batch``-wide batch at the
+    queued shapes) picks the smaller variant up front: one transfer, no
+    wasted large-variant load.
+
+    Every other hook delegates to the wrapped policy, so this composes
+    with any registered eviction strategy (``batch-bfe``,
+    ``batch-iws-bfe``, or ``BatchAware(MyPolicy())``).
+    """
+
+    def __init__(self, inner: PolicyLike = "bfe"):
+        self.inner = resolve_policy(inner)
+        self.name = f"batch-{self.inner.name}"
+
+    def victim_filter(self, state, app, now, *, delta, history):
+        return self.inner.victim_filter(state, app, now, delta=delta,
+                                        history=history)
+
+    def plan_procure(self, state, app, now, *, delta, history):
+        return self.inner.plan_procure(state, app, now, delta=delta,
+                                       history=history)
+
+    def plan_prefetch(self, state, app, now, *, delta, history):
+        return self.inner.plan_prefetch(state, app, now, delta=delta,
+                                        history=history)
+
+    def plan_headroom(self, state, app, now, need_mb, *, delta, history):
+        return self.inner.plan_headroom(state, app, now, need_mb,
+                                        delta=delta, history=history)
+
+    def demand_charge(self, demand: DemandContext) -> float:
+        return max(demand.kv_head_mb, demand.kv_full_mb)
+
+
+@register_policy("batch-bfe")
+def _batch_bfe() -> Policy:
+    return BatchAware("bfe")
+
+
+@register_policy("batch-iws-bfe")
+def _batch_iws_bfe() -> Policy:
+    return BatchAware("iws-bfe")
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: the bare-function POLICIES dict (pre-registry API)
+# ---------------------------------------------------------------------------
+def lfe(state: MemoryState, app: str, now: float, *, delta: float,
+        history: float = 0.0) -> ProcurePlan:
+    return LFE().plan_procure(state, app, now, delta=delta, history=history)
+
+
+def bfe(state: MemoryState, app: str, now: float, *, delta: float,
+        history: float = 0.0) -> ProcurePlan:
+    return BFE().plan_procure(state, app, now, delta=delta, history=history)
+
+
+def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
+           history: float = 0.0) -> ProcurePlan:
+    return WSBFE().plan_procure(state, app, now, delta=delta,
+                                history=history)
+
+
 def iws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
             history: float) -> ProcurePlan:
-    # Steps 2–3: τ = A′ not requested during H; E = τ non-overlapping with
-    # the requester's window.  (_downgrade_candidates applies both filters.)
-    cands = _downgrade_candidates(state, app, now, delta,
-                                  require_history=history)
-    if cands:
-        # Step 4: fitness score (Eq. 3).
-        dists = {}
-        for a in cands:
-            tj = state.tenants[a].predicted_next
-            dists[a] = (tj - now) if tj is not INF else INF
-        finite = [d for d in dists.values() if d is not INF and d > 0]
-        dmax = max(finite) if finite else 1.0
-        scores = {}
-        for a in cands:
-            d = dists[a]
-            norm = 1.0 if d is INF else max(d, 0.0) / max(dmax, 1e-9)
-            scores[a] = norm * (1.0 - state.p_unexpected(a))
-        # Step 5: max-heap on fitness.
-        heap = [(-scores[a], a) for a in cands]
-        heapq.heapify(heap)
-    else:
-        heap = []
+    return IWSBFE().plan_procure(state, app, now, delta=delta,
+                                 history=history)
 
-    for variant in state.tenants[app].zoo.variants:
-        evictions: List[Eviction] = []
-        h = list(heap)  # fresh heap per variant attempt (Steps 6–18 redo)
-        while _free_after(state, app, evictions) < variant.size_mb and h:
-            _, w = heapq.heappop(h)  # Step 7: extract max-fitness root
-            t = state.tenants[w]
-            # Step 9: scavenge by replacing with the lowest-precision model.
-            evictions.append(Eviction(w, t.loaded, t.zoo.smallest))
-        if _free_after(state, app, evictions) >= variant.size_mb:
-            # Steps 12–14: enact replacements, load m_i.
-            return ProcurePlan(app, variant, tuple(evictions))
-        # Step 17–18: retry with next smaller model.
-    return ProcurePlan(app, None)  # Step 17: inference request fails
+
+# Legacy string-keyed view of the four paper policies.  Kept verbatim for
+# callers that predate the registry; new code resolves through
+# ``resolve_policy`` so plugins participate too.
+POLICIES: Dict[str, Callable[..., ProcurePlan]] = {
+    "lfe": lfe,
+    "bfe": bfe,
+    "ws-bfe": ws_bfe,
+    "iws-bfe": iws_bfe,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -327,9 +602,42 @@ def kv_desperation_plan(state: MemoryState, app: str,
     return tuple(evictions)
 
 
-POLICIES: Dict[str, Callable[..., ProcurePlan]] = {
-    "lfe": lfe,
-    "bfe": bfe,
-    "ws-bfe": ws_bfe,
-    "iws-bfe": iws_bfe,
-}
+# ---------------------------------------------------------------------------
+# Composable fallback: what backstops a policy when its plan is unfundable
+# ---------------------------------------------------------------------------
+class FallbackPolicy:
+    """Protocol for the manager's last-resort eviction source: when the
+    configured :class:`Policy` cannot fund a plan (weights or cache), the
+    manager asks the fallback for evictions and enacts them.  ``None``
+    disables the backstop entirely — failures then surface as counted
+    rejections, the pure paper behaviour."""
+
+    name: ClassVar[str] = "?"
+
+    def plan(self, state: MemoryState, app: str,
+             need_mb: float) -> Tuple[Eviction, ...]:
+        raise NotImplementedError
+
+
+class DesperationFallback(FallbackPolicy):
+    """The serving runtime's default backstop (previously a manager
+    special case): window/history protections yield before an inference
+    fails — see :func:`kv_desperation_plan` for the full rationale."""
+
+    name = "desperation"
+
+    def plan(self, state: MemoryState, app: str,
+             need_mb: float) -> Tuple[Eviction, ...]:
+        return kv_desperation_plan(state, app, need_mb)
+
+
+def resolve_fallback(spec: Union[str, FallbackPolicy, None]
+                     ) -> Optional[FallbackPolicy]:
+    if spec is None or isinstance(spec, FallbackPolicy):
+        return spec
+    if spec == "desperation":
+        return DesperationFallback()
+    if spec == "none":
+        return None
+    raise KeyError(f"unknown fallback policy {spec!r}; "
+                   f"expected 'desperation', 'none', or a FallbackPolicy")

@@ -72,10 +72,22 @@ def _fit(params, opt_state, xs, ys, *, steps: int = 200):
 
 @dataclass
 class SeriesPredictor:
-    """Sliding-window RNN regressor over a scalar series."""
+    """Sliding-window RNN regressor over a scalar series.
+
+    ``min_fit_samples`` / ``refit_interval`` drive the serving runtime's
+    *background* training schedule: once the history holds at least
+    ``min_fit_samples`` observations, :meth:`fit_due` turns true, and
+    again every ``refit_interval`` further observations — the server
+    hands due predictors to the loader's staging worker
+    (``BackgroundLoader.submit_fit``) so training never blocks the
+    serving loop.
+    """
     context: int = 16
     hidden: int = 32
     seed: int = 0
+    min_fit_samples: int = 24
+    refit_interval: int = 16
+    fit_steps: int = 150  # AdamW steps per background fit
 
     def __post_init__(self):
         self.params = init_rnn(jax.random.key(self.seed), self.hidden)
@@ -83,14 +95,27 @@ class SeriesPredictor:
         self.mean = 1.0
         self.history: list[float] = []
         self.losses: Optional[np.ndarray] = None
+        self.fits = 0  # completed fit() calls
+        self._fit_len = 0  # history length at the last completed fit
 
     def observe(self, value: float) -> None:
         self.history.append(float(value))
 
+    def fit_due(self) -> bool:
+        """Enough new history to (re)train?  False until
+        ``min_fit_samples`` accumulate, then true every
+        ``refit_interval`` observations past the previous fit."""
+        n = len(self.history)
+        if n < max(self.min_fit_samples, self.context + 2):
+            return False
+        return self._fit_len == 0 or n - self._fit_len >= self.refit_interval
+
     def fit(self, steps: int = 200) -> float:
         """Train on all (context -> next) windows in the history.
-        Returns the final training loss."""
-        h = np.asarray(self.history, np.float32)
+        Returns the final training loss.  Safe to run off-thread while
+        the owner keeps observing: the history is snapshotted, and the
+        trained parameters land in one reference swap."""
+        h = np.asarray(list(self.history), np.float32)
         if len(h) < self.context + 2:
             return float("nan")
         self.mean = float(np.mean(h)) or 1.0
@@ -102,6 +127,8 @@ class SeriesPredictor:
         self.params, self.opt_state, losses = _fit(
             self.params, self.opt_state, xs, ys, steps=steps)
         self.losses = np.asarray(losses)
+        self.fits += 1
+        self._fit_len = len(h)
         return float(losses[-1])
 
     def predict(self) -> float:

@@ -81,10 +81,14 @@ def compressed_allreduce_demo(values: jnp.ndarray, mesh) -> jnp.ndarray:
     """shard_map demo used by tests: int8-compressed all-reduce over the
     first mesh axis."""
     axis = mesh.axis_names[0]
-    fn = jax.shard_map(
-        lambda v: compressed_psum(v, axis),
-        mesh=mesh,
-        in_specs=P(axis),
-        out_specs=P(),
-    )
+    def body(v):
+        return compressed_psum(v, axis)
+
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map(body, mesh=mesh, in_specs=P(axis),
+                           out_specs=P())
+    else:  # older jax: the pre-promotion experimental API
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(body, mesh=mesh, in_specs=P(axis), out_specs=P(),
+                       check_rep=False)
     return fn(values)

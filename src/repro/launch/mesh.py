@@ -14,11 +14,21 @@ ICI_BW = 50e9  # bytes/s per link
 HBM_BYTES = 16 * 1024 ** 3  # per chip
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer releases; older ones
+    default to auto axes anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def data_axes(mesh) -> tuple:

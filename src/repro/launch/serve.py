@@ -1,5 +1,8 @@
 """Multi-tenant serving launcher: Edge-MultiAI managing real (reduced)
 models under a device memory budget, driven by a synthetic request trace.
+The stack comes up through the declarative API — every CLI flag maps
+onto a :class:`~repro.serving.api.ServingConfig` field and
+``EdgeServer.build`` does the wiring.
 
     PYTHONPATH=src python -m repro.launch.serve --tenants tinyllama-1.1b \
         gemma2-2b mamba2-780m --requests 30 --budget-mb 6
@@ -8,13 +11,12 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.models import transformer as T
-from repro.serving import Batcher, MultiTenantServer, Request
+from repro.core.policies import available_policies
+from repro.serving import Batcher, Request
+from repro.serving.api import (BatchingSpec, EdgeServer, ServingConfig,
+                               TenantSpec)
 
 
 def main() -> None:
@@ -23,25 +25,28 @@ def main() -> None:
                     default=["tinyllama-1.1b", "gemma2-2b", "mamba2-780m"])
     ap.add_argument("--requests", type=int, default=30)
     ap.add_argument("--budget-mb", type=float, default=6.0)
-    ap.add_argument("--policy", default="iws-bfe")
+    ap.add_argument("--policy", default="iws-bfe",
+                    choices=["none", *available_policies()])
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sim", action="store_true",
+                    help="sim-time executors (no XLA, deterministic)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
-    server = MultiTenantServer(budget_mb=args.budget_mb,
-                               policy=args.policy, delta_ms=2000.0)
+    server = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in args.tenants),
+        budget_mb=args.budget_mb,
+        policy=args.policy,
+        delta_ms=2000.0,
+        batching=BatchingSpec(max_batch=4),
+        executor="sim" if args.sim else "real"))
     cfgs = {}
     for name in args.tenants:
-        cfg = get_config(name, reduced=True)
-        params = T.init_params(cfg, jax.random.key(hash(name) % 2 ** 31),
-                               jnp.float32)
-        server.register(name, cfg, params)
-        cfgs[name] = cfg
+        cfgs[name] = server.tenants[name].cfg
         zoo = server.tenants[name].zoo
         print(f"tenant {name}: zoo " + ", ".join(
             f"{v.bits}b={v.size_mb:.2f}MB" for v in zoo.variants))
-    server.start()
 
     batcher = Batcher(max_batch=4)
     now = 0.0
@@ -57,7 +62,9 @@ def main() -> None:
             while (b := batcher.next_batch()) is not None:
                 server.predict_and_preload(now)
                 extra = None
-                if cfg.frontend == "vision_stub":
+                # Gate on the *batch's* tenant, not the most recently
+                # submitted request's.
+                if cfgs[b.app].frontend == "vision_stub" and not args.sim:
                     extra = {"patch_embeds": np.zeros(
                         (len(b.requests), cfgs[b.app].num_vision_tokens,
                          cfgs[b.app].d_model), np.float32)}
@@ -68,6 +75,7 @@ def main() -> None:
                       f"{' FAIL' if r.failed else ''} bits={r.bits} "
                       f"lat={r.latency_s * 1e3:.0f}ms")
     print("\nstats:", server.stats())
+    server.close()
 
 
 if __name__ == "__main__":

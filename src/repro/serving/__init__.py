@@ -1,12 +1,19 @@
+from repro.serving.api import (BatchingSpec, LoaderSpec, PredictorSpec,
+                               ServingConfig, SimTenant, TenantSpec,
+                               build_server)
 from repro.serving.batcher import Batch, Batcher, Request
-from repro.serving.engine import (EngineEvent, RequestResult, ServingEngine,
+from repro.serving.engine import (EngineEvent, LoaderChannel, RequestResult,
+                                  ServingEngine, ServingHost, TenantExecutor,
                                   kv_cache_mb, poisson_trace,
                                   trace_from_workload)
 from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
-from repro.serving.server import MultiTenantServer, ServeResult, TenantRuntime
+from repro.serving.server import (EdgeServer, MultiTenantServer, ServeResult,
+                                  TenantRuntime)
 
-__all__ = ["Batch", "Batcher", "Request", "MultiTenantServer",
+__all__ = ["Batch", "Batcher", "Request", "EdgeServer", "MultiTenantServer",
            "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
            "EngineEvent", "kv_cache_mb", "poisson_trace",
            "trace_from_workload", "BackgroundLoader", "InflightLoad",
-           "LoadRecord"]
+           "LoadRecord", "ServingConfig", "TenantSpec", "PredictorSpec",
+           "BatchingSpec", "LoaderSpec", "SimTenant", "build_server",
+           "ServingHost", "TenantExecutor", "LoaderChannel"]

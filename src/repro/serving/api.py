@@ -1,0 +1,274 @@
+"""`repro.serving.api` — the declarative front door for the serving stack.
+
+One config tree, one entry point::
+
+    from repro.serving.api import EdgeServer, ServingConfig, TenantSpec
+
+    srv = EdgeServer.build(ServingConfig(
+        tenants=(TenantSpec("tinyllama-1.1b"), TenantSpec("gemma2-2b")),
+        policy="iws-bfe",                    # any registered Policy
+        batching=BatchingSpec(max_batch=4),
+    ))
+    stats = srv.engine.run_trace(trace)
+
+``build`` performs every piece of wiring the benchmarks, examples, and
+launcher used to repeat by hand: resolve each tenant's model config,
+initialize and quantize its zoo (or attach a sim-time executor), install
+the arrival predictor, derive the contended memory budget, resolve the
+policy through the registry, and attach the background loader + engine.
+The imperative ``EdgeServer(...)`` / ``register`` / ``start`` path stays
+public underneath for callers with custom params.
+
+Specs are frozen dataclasses with a ``to_dict``/``from_dict`` round trip
+so a serving deployment is one JSON-able document.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.manager import LOAD_OVER_INFER
+from repro.core.model_zoo import ModelVariant, zoo_from_config
+from repro.core.policies import Policy, resolve_policy
+from repro.core.predictor import RequestPredictor
+from repro.models.config import ModelConfig
+from repro.serving.server import EdgeServer
+
+__all__ = ["EdgeServer", "ServingConfig", "TenantSpec", "PredictorSpec",
+           "BatchingSpec", "LoaderSpec", "SimTenant", "build_server"]
+
+
+# ---------------------------------------------------------------------------
+# The config tree
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TenantSpec:
+    """One application: which architecture, which precision variants.
+
+    ``arch`` defaults to ``name`` (the registered config name); ``seed``
+    defaults to a stable digest of the name so parameter init is
+    reproducible across processes without coordinating seeds."""
+    name: str
+    arch: Optional[str] = None
+    precisions: Tuple[int, ...] = (16, 8)
+    reduced: bool = True
+    seed: Optional[int] = None
+
+    @property
+    def config_name(self) -> str:
+        return self.arch or self.name
+
+    @property
+    def init_seed(self) -> int:
+        if self.seed is not None:
+            return self.seed
+        return zlib.crc32(self.name.encode()) & 0x7FFFFFFF
+
+
+@dataclass(frozen=True)
+class PredictorSpec:
+    """Per-tenant RNN arrival-predictor shape and its background-training
+    schedule (fits run on the loader's staging worker)."""
+    context: int = 8
+    hidden: int = 16
+    min_fit_samples: int = 24
+    refit_interval: int = 16
+    fit_steps: int = 150
+
+
+@dataclass(frozen=True)
+class BatchingSpec:
+    max_batch: int = 8
+    window_ms: float = 0.0
+
+
+@dataclass(frozen=True)
+class LoaderSpec:
+    """``prefetch=False`` is the reactive baseline: no background loader,
+    every weight move synchronous inside the admit path."""
+    prefetch: bool = True
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Everything ``EdgeServer.build`` needs, in one declarative tree.
+
+    ``budget_mb=None`` derives the standard contended budget from the
+    registered zoos (every tenant resident at its smallest variant, room
+    to upgrade the widest zoo, 5% slack) plus KV headroom —
+    ``kv_headroom_mb`` directly, and/or ``kv_headroom_shape=(batch,
+    total_len)`` for the largest decode cache the workload will admit.
+
+    ``policy`` resolves through the policy registry (a name like
+    ``"iws-bfe"`` or ``"batch-bfe"``, a Policy class, or an instance);
+    ``"none"`` is the paper's unmanaged baseline (no procurement
+    authority).  ``fallback`` is the last-resort eviction backstop
+    (``"desperation"`` or ``"none"``).  ``executor="sim"`` swaps every
+    tenant for a deterministic sim-time executor — no XLA, virtual
+    service times — for tests and capacity modelling.
+    """
+    tenants: Tuple[TenantSpec, ...]
+    budget_mb: Optional[float] = None
+    kv_headroom_mb: float = 0.0
+    kv_headroom_shape: Optional[Tuple[int, int]] = None
+    policy: Union[str, Policy, type] = "iws-bfe"
+    fallback: Union[str, None, Any] = "desperation"
+    delta_ms: float = 500.0
+    history_ms: float = 3000.0
+    batching: BatchingSpec = field(default_factory=BatchingSpec)
+    loader: LoaderSpec = field(default_factory=LoaderSpec)
+    predictor: PredictorSpec = field(default_factory=PredictorSpec)
+    executor: str = "real"  # "real" | "sim"
+    straggler_deadline_s: float = 30.0
+
+    def __post_init__(self):
+        if not self.tenants:
+            raise ValueError("ServingConfig needs at least one TenantSpec")
+        names = [t.name for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names in {names}")
+        if self.executor not in ("real", "sim"):
+            raise ValueError(
+                f"executor must be 'real' or 'sim', got {self.executor!r}")
+        # Fail at declaration time, not at start(): unknown policy names
+        # raise here with the registered set in the message.  "none" is
+        # the unmanaged baseline, handled by the manager itself.
+        if self.policy != "none":
+            resolve_policy(self.policy)
+
+    # -- serialization round trip ---------------------------------------
+    def to_dict(self) -> dict:
+        from repro.core.policies import available_policies
+        d = dataclasses.asdict(self)
+        if not isinstance(self.policy, str):
+            name = resolve_policy(self.policy).name
+            if name not in available_policies():
+                raise ValueError(
+                    f"policy {type(self.policy).__name__!r} (name="
+                    f"{name!r}) is not registered — @register_policy it "
+                    f"to make the config serializable")
+            d["policy"] = name
+        if not isinstance(d.get("fallback"), (str, type(None))):
+            name = self.fallback.name
+            if name not in ("desperation", "none"):
+                raise ValueError(
+                    f"fallback {type(self.fallback).__name__!r} has no "
+                    f"serializable name; pass 'desperation'/'none' or "
+                    f"keep the instance form for in-process use")
+            d["fallback"] = name
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServingConfig":
+        d = dict(d)
+        d["tenants"] = tuple(
+            t if isinstance(t, TenantSpec)
+            else TenantSpec(**{**t, "precisions": tuple(t["precisions"])})
+            for t in d["tenants"])
+        for key, spec_cls in (("batching", BatchingSpec),
+                              ("loader", LoaderSpec),
+                              ("predictor", PredictorSpec)):
+            if key in d and isinstance(d[key], dict):
+                d[key] = spec_cls(**d[key])
+        if d.get("kv_headroom_shape") is not None:
+            d["kv_headroom_shape"] = tuple(d["kv_headroom_shape"])
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# Sim-time executor: the TenantExecutor protocol without XLA
+# ---------------------------------------------------------------------------
+class SimTenant:
+    """Deterministic ``TenantExecutor``: zoo sizes from exact parameter
+    math (:func:`zoo_from_config`, no weights materialized), zero-token
+    outputs, and a *virtual* service time derived from the loaded
+    variant's load cost via the paper's load/infer asymmetry — so a full
+    engine run is reproducible bit-for-bit with no XLA and no wall-clock
+    jitter."""
+
+    def __init__(self, name: str, cfg: ModelConfig,
+                 precisions: Tuple[int, ...] = (16, 8),
+                 predictor: Optional[RequestPredictor] = None,
+                 service_ms: Optional[float] = None):
+        self.name = name
+        self.cfg = cfg
+        self.zoo = zoo_from_config(cfg, precisions=tuple(precisions))
+        self.predictor = predictor or RequestPredictor(context=8, hidden=16)
+        self.service_ms = service_ms  # None => variant.load_ms / asymmetry
+        self.loaded_bits: Optional[int] = None
+
+    # -- loader callback target -----------------------------------------
+    def set_variant(self, variant: Optional[ModelVariant]) -> None:
+        self.loaded_bits = variant.bits if variant else None
+
+    # -- TenantExecutor protocol -----------------------------------------
+    def execute(self, batch, extra: Optional[dict] = None
+                ) -> Tuple[np.ndarray, float]:
+        assert self.loaded_bits is not None, f"{self.name}: not loaded"
+        virt = (self.service_ms if self.service_ms is not None
+                else self.zoo.by_bits(self.loaded_bits).load_ms
+                / LOAD_OVER_INFER)
+        tokens = np.zeros((len(batch.requests), batch.max_new), np.int32)
+        return tokens, virt
+
+
+# ---------------------------------------------------------------------------
+# The wiring ``EdgeServer.build`` performs
+# ---------------------------------------------------------------------------
+def build_server(config: ServingConfig, cls=None):
+    """Resolve a :class:`ServingConfig` into a started server: register
+    every tenant (real quantized zoos or sim executors), install
+    predictors, derive the budget, and ``start()`` the manager + loader +
+    engine.  This is the only construction path the benchmarks, examples,
+    and launcher use."""
+    from repro.serving.engine import kv_cache_mb
+
+    cls = cls or EdgeServer
+    srv = cls(budget_mb=config.budget_mb or 0.0,
+              policy=config.policy,
+              fallback=config.fallback,
+              delta_ms=config.delta_ms,
+              history_ms=config.history_ms,
+              straggler_deadline_s=config.straggler_deadline_s,
+              max_batch=config.batching.max_batch,
+              batch_window_ms=config.batching.window_ms,
+              prefetch=config.loader.prefetch)
+    ps = config.predictor
+    for spec in config.tenants:
+        from repro.configs import get_config
+        cfg = get_config(spec.config_name, reduced=spec.reduced)
+        predictor = RequestPredictor(
+            context=ps.context, hidden=ps.hidden,
+            min_fit_samples=ps.min_fit_samples,
+            refit_interval=ps.refit_interval,
+            fit_steps=ps.fit_steps)
+        if config.executor == "sim":
+            srv.register_tenant(spec.name, SimTenant(
+                spec.name, cfg, precisions=spec.precisions,
+                predictor=predictor))
+        else:
+            import jax
+            import jax.numpy as jnp
+
+            from repro.models import transformer as T
+            params = T.init_params(cfg, jax.random.key(spec.init_seed),
+                                   jnp.float32)
+            srv.register(spec.name, cfg, params, spec.precisions,
+                         predictor=predictor)
+    if config.executor == "sim":
+        # Deterministic runs: a background fit must not race the virtual
+        # clock, so sim builds wait each fit out at its schedule point.
+        srv.sync_predictor_fits = True
+    if config.budget_mb is None:
+        headroom = config.kv_headroom_mb
+        if config.kv_headroom_shape is not None:
+            b, total_len = config.kv_headroom_shape
+            headroom += max(kv_cache_mb(t.cfg, b, total_len)
+                            for t in srv.tenants.values())
+        srv.budget_mb = srv.contention_budget(headroom)
+    srv.start()
+    return srv

@@ -18,8 +18,18 @@ invisible to the Edge-MultiAI budget.  This engine closes both gaps:
 
 Time is virtual (milliseconds, like the simulator) so runs are
 reproducible; batch *service* time is the measured wall clock of the real
-prefill+decode, folded back into the virtual clock.  ``run_async`` wraps
-the loop for asyncio callers.
+prefill+decode — or a deterministic virtual time when the tenant's
+executor supplies one — folded back into the virtual clock.  ``run_async``
+wraps the loop for asyncio callers.
+
+The engine is written against three structural protocols rather than the
+concrete serving classes: :class:`ServingHost` (what it needs from the
+tenant registry/facade), :class:`TenantExecutor` (one tenant's config,
+zoo, predictor, and execution), and :class:`LoaderChannel` (the
+background staging pipeline).  ``MultiTenantServer``/``TenantRuntime``/
+``BackgroundLoader`` are the production implementations; the sim-time
+executor (``repro.serving.api.SimTenant``) drops in for deterministic
+tests with zero XLA.
 """
 from __future__ import annotations
 
@@ -28,18 +38,75 @@ import functools
 import math
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Mapping, Optional,
+                    Protocol, Sequence, Tuple)
 
 import jax
 import numpy as np
 
 from repro.core.manager import BatchAdmission
+from repro.core.policies import DemandContext, ProcurePlan
 from repro.core.simulator import Workload, generate_workload
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.batcher import Batch, Batcher, Request
 
 MB = 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Structural protocols: the engine's entire view of the serving stack
+# ---------------------------------------------------------------------------
+class TenantExecutor(Protocol):
+    """One tenant, as the engine sees it: enough to size caches, charge
+    load penalties, feed the arrival predictor, and run a batch.
+    ``execute`` returns the generated tokens plus an optional *virtual*
+    service time in ms — ``None`` means "time me by wall clock" (the real
+    XLA runtime), a number means deterministic sim time."""
+
+    cfg: ModelConfig
+    zoo: Any  # ModelZoo
+    predictor: Any  # RequestPredictor
+
+    def execute(self, batch: Batch, extra: Optional[dict] = None
+                ) -> Tuple[np.ndarray, Optional[float]]: ...
+
+
+class LoaderChannel(Protocol):
+    """The background staging pipeline, as the engine drives it."""
+
+    inflight: Mapping[str, Any]
+    on_event: Optional[Callable[[float, str, str, float], None]]
+    prefetch_hits: int
+    prefetch_wasted: int
+    demand_loads: int
+    loads_committed: int
+    load_overlap_ms: float
+    fits_scheduled: int
+
+    def enqueue(self, plan: ProcurePlan, now_ms: float, *,
+                demand: bool = ..., predicted_ms: float = ...) -> Any: ...
+    def reap(self, now_ms: float) -> List[Any]: ...
+    def cancel(self, app: str, now_ms: float) -> Any: ...
+    def cancel_stale(self, now_ms: float, delta_ms: float,
+                     has_queued: Callable[[str], bool]) -> int: ...
+    def peek_use(self, app: str) -> Any: ...
+    def take_use(self, app: str, warm: bool) -> Any: ...
+    def earliest_ready(self) -> float: ...
+    def close(self) -> None: ...
+
+
+class ServingHost(Protocol):
+    """What the engine needs from the tenant registry/facade — the
+    manager for admission accounting, the tenant executors, and the
+    predictor-driven prefetch hooks.  ``EdgeServer`` is the production
+    implementation."""
+
+    manager: Any  # EdgeMultiAI
+    tenants: Mapping[str, TenantExecutor]
+
+    def predict_and_preload(self, now_ms: float) -> None: ...
+    def next_prefetch_trigger(self, now_ms: float) -> float: ...
 
 
 @functools.lru_cache(maxsize=1024)
@@ -92,24 +159,23 @@ class EngineEvent:
 Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
 
 
-def _default_executor(runtime, batch: Batch,
-                      extra: Optional[dict] = None) -> np.ndarray:
-    return runtime.generate(batch.prompts, batch.max_new, extra)
-
-
 class ServingEngine:
     """Pulls batches from the Batcher and drives them through the
     Edge-MultiAI manager with full runtime-memory accounting.
 
-    ``executor`` is injectable so accounting/invariant tests can run the
-    full admit/retire protocol without touching XLA.
+    ``host`` is anything satisfying :class:`ServingHost`; per-batch
+    execution goes through each tenant's :class:`TenantExecutor`.  The
+    legacy ``executor`` callable ``(runtime, batch, extra) -> tokens``
+    remains injectable (it overrides the protocol path) so
+    accounting/invariant tests can run the full admit/retire protocol
+    without touching XLA.
     """
 
-    def __init__(self, server, *, max_batch: int = 8,
+    def __init__(self, host: ServingHost, *, max_batch: int = 8,
                  batch_window_ms: float = 0.0,
                  executor: Optional[Executor] = None,
-                 loader=None):
-        self.server = server
+                 loader: Optional[LoaderChannel] = None):
+        self.host = host
         self.batcher = Batcher(max_batch=max_batch)
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
@@ -117,7 +183,9 @@ class ServingEngine:
         self.events: List[EngineEvent] = []
         self.kv_downgrades = 0  # requester shrank itself to fit its cache
         self.weight_failures = 0  # batches whose weights were unprocurable
-        self._executor = executor or _default_executor
+        # None => route through TenantExecutor.execute (the protocol
+        # path); a callable overrides it (legacy injection point).
+        self._executor = executor
         # Background loading pipeline (None = reactive PR-1 behavior:
         # every load is enacted synchronously inside the admit path and
         # charges the loop clock).
@@ -130,15 +198,20 @@ class ServingEngine:
         self._spans: List[Tuple[float, float, str]] = []
 
     @property
+    def server(self) -> ServingHost:
+        """Deprecated alias for :attr:`host` (pre-protocol name)."""
+        return self.host
+
+    @property
     def kv_rejections(self) -> int:
         """Batches bounced for cache pressure — the manager's counter is
         the single source of truth (it performs the rejection)."""
-        mgr = self.server.manager
+        mgr = self.host.manager
         return mgr.kv_rejections if mgr else 0
 
     # ------------------------------------------------------------------
     def _event(self, t_ms: float, kind: str, app: str, kv_mb: float) -> None:
-        st = self.server.manager.state
+        st = self.host.manager.state
         self.events.append(EngineEvent(
             t_ms, kind, app, kv_mb, st.used_mb, st.free_mb,
             st.inflight_mb))
@@ -151,7 +224,7 @@ class ServingEngine:
     def submit(self, req: Request, now_ms: float) -> None:
         """Enqueue a request; feeds the tenant's RNN arrival predictor."""
         req.arrival_ms = now_ms if req.arrival_ms == 0.0 else req.arrival_ms
-        self.server.tenants[req.app].predictor.observe_request(
+        self.host.tenants[req.app].predictor.observe_request(
             req.arrival_ms)
         self.batcher.submit(req)
         self._event(req.arrival_ms, "submit", req.app, 0.0)
@@ -176,9 +249,9 @@ class ServingEngine:
         the request waited out the transfer, so the serve is a cold
         start even though the weights are resident by admission time.
         """
-        mgr = self.server.manager
+        mgr = self.host.manager
         assert mgr is not None, "server.start() before engine use"
-        tr = self.server.tenants[batch.app]
+        tr = self.host.tenants[batch.app]
         total_len = batch.prompts.shape[1] + batch.max_new
         kv_mb = kv_cache_mb(tr.cfg, len(batch.requests), total_len)
         if self.loader is not None:
@@ -229,8 +302,12 @@ class ServingEngine:
                        if sync_cold and not adm.warm else 0.0)
         self._event(now_ms, "admit", batch.app, adm.kv_mb)
         t0 = time.monotonic()
+        virtual_ms: Optional[float] = None
         try:
-            tokens = self._executor(tr, batch, extra)
+            if self._executor is not None:  # legacy injected callable
+                tokens = self._executor(tr, batch, extra)
+            else:  # TenantExecutor protocol: tokens + optional sim time
+                tokens, virtual_ms = tr.execute(batch, extra)
         except BaseException:
             # Execution crashed (XLA OOM, bad inputs): release the cache
             # charge so it doesn't leak, balance the audit trail, and
@@ -246,7 +323,8 @@ class ServingEngine:
                               len(batch.requests), 0.0)
                 for r in batch.requests)
             raise
-        service_ms = (time.monotonic() - t0) * 1e3 + load_pen_ms
+        service_ms = (virtual_ms if virtual_ms is not None
+                      else (time.monotonic() - t0) * 1e3) + load_pen_ms
         done_ms = now_ms + service_ms
         mgr.release_kv(batch.app, adm.kv_mb)
         self._event(done_ms, "retire", batch.app, -adm.kv_mb)
@@ -267,7 +345,7 @@ class ServingEngine:
         the load commits, while everyone else keeps prefilling/decoding.
         If no variant fits, the batch is admitted anyway so the failure
         is counted the normal way."""
-        mgr = self.server.manager
+        mgr = self.host.manager
         for app in self.batcher.queued_apps():
             if app in self.loader.inflight:
                 continue
@@ -276,9 +354,16 @@ class ServingEngine:
             q = self.batcher.queues[app][: self.max_batch]
             total_len = (max(len(r.prompt) for r in q)
                          + max(r.max_new for r in q))
-            kv = kv_cache_mb(self.server.tenants[app].cfg, len(q),
-                             total_len)
-            plan = mgr.plan_demand(app, now, kv)
+            cfg = self.host.tenants[app].cfg
+            # Head batch as queued right now, plus the full-batch bound a
+            # burst could fill in before the load commits — the policy's
+            # demand_charge hook picks which one to plan around.
+            demand = DemandContext(
+                kv_head_mb=kv_cache_mb(cfg, len(q), total_len),
+                kv_full_mb=kv_cache_mb(cfg, self.max_batch, total_len),
+                queue_depth=self.batcher.queued(app),
+                max_batch=self.max_batch)
+            plan = mgr.plan_demand(app, now, demand=demand)
             if plan is None:
                 # Speculation yields to demand: cancel predictor-driven
                 # prefetches (least-credible prediction first) until the
@@ -289,7 +374,7 @@ class ServingEngine:
                          if not ld.demand),
                         key=lambda a: -self.loader.inflight[a].predicted_ms):
                     self.loader.cancel(guess, now)
-                    plan = mgr.plan_demand(app, now, kv)
+                    plan = mgr.plan_demand(app, now, demand=demand)
                     if plan is not None:
                         break
             if plan is not None:
@@ -336,7 +421,7 @@ class ServingEngine:
                     # prefetch trigger (t_pred − Δ − θ) — sleeping past
                     # either would turn a hideable load into a stall.
                     t_next = min(t_next, self.loader.earliest_ready(),
-                                 self.server.next_prefetch_trigger(now))
+                                 self.host.next_prefetch_trigger(now))
                 now = max(now, t_next)
             while i < n and pending[i].arrival_ms <= now:
                 self.submit(pending[i], pending[i].arrival_ms)
@@ -348,7 +433,7 @@ class ServingEngine:
                 continue
             if self.loader is not None:
                 self._reap_loads(now)
-                self.server.predict_and_preload(now)
+                self.host.predict_and_preload(now)
                 self._stage_demand_loads(now)
                 batch = self.batcher.next_batch(
                     exclude=self.loader.inflight)
@@ -385,11 +470,20 @@ class ServingEngine:
     def stats(self) -> dict:
         """Aggregate + per-tenant latency percentiles and throughput,
         plus the prefetch pipeline's hit/waste/overlap counters."""
+        tens = self.host.manager.state.tenants.values()
+        total_req = sum(t.requests for t in tens)
         out: dict = {
             "requests": len(self.results),
             "kv_downgrades": self.kv_downgrades,
             "kv_rejections": self.kv_rejections,
             "weight_failures": self.weight_failures,
+            # Fraction of batch admissions arriving inside a predicted
+            # window (the manager's on_request unit — one count per
+            # admitted batch, not per request) — the live measure of
+            # predictor leverage.
+            "prediction_hit_rate": (
+                sum(t.requests - t.unexpected for t in tens) / total_req
+                if total_req else 0.0),
             "per_tenant": {},
         }
         if self.loader is not None:
@@ -398,7 +492,8 @@ class ServingEngine:
                 prefetch_wasted=self.loader.prefetch_wasted,
                 demand_loads=self.loader.demand_loads,
                 loads_committed=self.loader.loads_committed,
-                load_overlap_ms=self.loader.load_overlap_ms)
+                load_overlap_ms=self.loader.load_overlap_ms,
+                fits_scheduled=self.loader.fits_scheduled)
         if not self.results:
             out["warm_ratio"] = 0.0
             return out
@@ -435,7 +530,7 @@ class ServingEngine:
         """Every recorded event must respect the memory budget —
         committed memory *and* in-flight background-load claims."""
         budget = (budget_mb if budget_mb is not None
-                  else self.server.manager.state.budget_mb)
+                  else self.host.manager.state.budget_mb)
         for ev in self.events:
             if ev.used_mb + ev.inflight_mb > budget + 1e-6:
                 raise AssertionError(

@@ -97,16 +97,24 @@ class BackgroundLoader:
         self._stage_fn = stage_fn or (lambda app, variant: None)
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="model-loader")
+        # Predictor fits get their own worker: they mutate no device
+        # state (so they need no slot in the staging channel's total
+        # order), and a 150-step RNN fit queued ahead of a weight move
+        # would head-of-line block reap()/stage_sync() in wall clock.
+        self._fit_pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="predictor-fit")
         self.inflight: Dict[str, InflightLoad] = {}
         self._committed: Dict[str, LoadRecord] = {}
         self.history: List[LoadRecord] = []
         self.on_event: Optional[LoadEventHook] = None
+        self._fits: Dict[int, Future] = {}  # in-flight predictor fits
         # Counters surfaced through engine/server stats.
         self.prefetch_hits = 0  # predictor-staged load served warm
         self.prefetch_wasted = 0  # cancelled before any request used it
         self.demand_loads = 0  # cold admits staged off the loop instead
         self.loads_committed = 0
         self.load_overlap_ms = 0.0
+        self.fits_scheduled = 0  # background predictor fits enqueued
 
     # -- physical staging channel ---------------------------------------
     def stage(self, app: str, variant: Optional[ModelVariant]) -> Future:
@@ -118,8 +126,30 @@ class BackgroundLoader:
         """Hot-path (admission) staging: same channel, but wait for it."""
         self.stage(app, variant).result()
 
+    def submit_fit(self, predictor,
+                   steps: Optional[int] = None) -> Optional[Future]:
+        """Schedule a predictor's :meth:`fit` on the loader's fit worker —
+        the RNN trains in the background once enough inter-arrival
+        history accumulates, never on the serving loop and never ahead
+        of a weight move (fits ride a separate worker from the staging
+        channel).  One fit per predictor at a time: a still-running fit
+        dedupes the resubmission (returns None).  ``steps`` defaults to
+        the predictor's own ``fit_steps`` (the ``PredictorSpec.fit_steps``
+        config knob)."""
+        key = id(predictor)
+        fut = self._fits.get(key)
+        if fut is not None and not fut.done():
+            return None
+        if steps is None:
+            steps = getattr(predictor, "fit_steps", 150)
+        fut = self._fit_pool.submit(predictor.fit, steps)
+        self._fits[key] = fut
+        self.fits_scheduled += 1
+        return fut
+
     def close(self) -> None:
         self._pool.shutdown(wait=True)
+        self._fit_pool.shutdown(wait=True)
 
     # -- load lifecycle --------------------------------------------------
     def _emit(self, t_ms: float, kind: str, app: str, mb: float) -> None:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import functools
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -68,10 +69,15 @@ class ServeResult:
 
 
 class TenantRuntime:
-    """One application: config + host-side zoo + device-side loaded params."""
+    """One application: config + host-side zoo + device-side loaded params.
+
+    The production implementation of the engine's ``TenantExecutor``
+    protocol — :meth:`execute` runs the real fused prefill+decode and is
+    timed by wall clock (it returns no virtual service time)."""
 
     def __init__(self, name: str, cfg: ModelConfig, params,
-                 precisions: Tuple[int, ...] = (16, 8)):
+                 precisions: Tuple[int, ...] = (16, 8),
+                 predictor: Optional[RequestPredictor] = None):
         self.name = name
         self.cfg = cfg
         # Host "storage": every zoo variant, kept off-device as numpy.
@@ -91,7 +97,7 @@ class TenantRuntime:
                 for b in precisions))
         self.device_params: Optional[Any] = None
         self.loaded_bits: Optional[int] = None
-        self.predictor = RequestPredictor(context=8, hidden=16)
+        self.predictor = predictor or RequestPredictor(context=8, hidden=16)
         self._decode = None  # jitted per (bits)
 
     # -- loader callback target -------------------------------------------
@@ -131,23 +137,40 @@ class TenantRuntime:
             toks.append(T.greedy_token(cfg, logits))
         return np.stack([np.asarray(t) for t in toks], axis=1)
 
+    # -- TenantExecutor protocol ------------------------------------------
+    def execute(self, batch, extra: Optional[dict] = None
+                ) -> Tuple[np.ndarray, Optional[float]]:
+        """Run one batch; wall-clock timed (no virtual service time)."""
+        return self.generate(batch.prompts, batch.max_new, extra), None
 
-class MultiTenantServer:
+
+class EdgeServer:
     """The end-to-end system: Edge-MultiAI + real tenants + batching.
 
-    Since the engine refactor this object is the *tenant registry and
-    facade*: ``serve()`` keeps its one-call API but delegates every
-    admit/execute/retire cycle to the :class:`ServingEngine`, which also
-    charges each batch's KV cache against the memory budget."""
+    This object is the *tenant registry and facade* (the engine's
+    ``ServingHost``): ``serve()`` keeps its one-call API but delegates
+    every admit/execute/retire cycle to the :class:`ServingEngine`, which
+    also charges each batch's KV cache against the memory budget.
 
-    def __init__(self, budget_mb: float, policy: str = "iws-bfe",
+    The declarative front door is :meth:`build` — one call that resolves
+    a :class:`~repro.serving.api.ServingConfig` into a fully wired,
+    started server (tenants registered, policy resolved through the
+    registry, loader and engine attached, budget derived).  The
+    imperative ``__init__`` / ``register`` / ``start`` path underneath
+    stays public for callers that need custom params or executors.
+    """
+
+    def __init__(self, budget_mb: float, policy="iws-bfe",
                  delta_ms: float = 500.0, straggler_deadline_s: float = 30.0,
                  max_batch: int = 8, batch_window_ms: float = 0.0,
-                 prefetch: bool = True):
-        self.tenants: Dict[str, TenantRuntime] = {}
+                 prefetch: bool = True, history_ms: float = 3000.0,
+                 fallback="desperation"):
+        self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
+        self.fallback = fallback
         self.delta_ms = delta_ms
+        self.history_ms = history_ms
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
@@ -157,10 +180,33 @@ class MultiTenantServer:
         self.straggler_deadline_s = straggler_deadline_s
         self.redispatch_count = 0
         self.results: List[ServeResult] = []
+        # Sim-executor builds set this: background fits complete before
+        # the next prediction so virtual-time runs stay bit-deterministic
+        # (a wall-clock fit racing the virtual clock would flip
+        # predictions at a nondeterministic timestamp).
+        self.sync_predictor_fits = False
+
+    @classmethod
+    def build(cls, config) -> "EdgeServer":
+        """Resolve a :class:`repro.serving.api.ServingConfig` into a
+        started server — the single wiring point every benchmark,
+        example, and launcher goes through."""
+        from repro.serving.api import build_server  # local: avoids cycle
+        return build_server(config, cls=cls)
 
     def register(self, name: str, cfg: ModelConfig, params,
-                 precisions: Tuple[int, ...] = (16, 8)) -> None:
-        self.tenants[name] = TenantRuntime(name, cfg, params, precisions)
+                 precisions: Tuple[int, ...] = (16, 8),
+                 predictor: Optional[RequestPredictor] = None) -> None:
+        """Register a real-model tenant (host-side zoo built from
+        ``params`` by quantization)."""
+        self.tenants[name] = TenantRuntime(name, cfg, params, precisions,
+                                           predictor=predictor)
+
+    def register_tenant(self, name: str, tenant) -> None:
+        """Register any ``TenantExecutor`` implementation — e.g. the
+        sim-time executor (:class:`repro.serving.api.SimTenant`) for
+        deterministic, XLA-free tests."""
+        self.tenants[name] = tenant
 
     def contention_budget(self, kv_headroom_mb: float = 0.0) -> float:
         """Standard contended budget over the registered tenants: every
@@ -193,7 +239,8 @@ class MultiTenantServer:
 
         self.manager = EdgeMultiAI(
             zoos, self.budget_mb, policy=self.policy,
-            delta_ms=self.delta_ms, loader=loader_cb)
+            delta_ms=self.delta_ms, history_ms=self.history_ms,
+            loader=loader_cb, fallback=self.fallback)
         self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
                        if self.prefetch else None)
         self.engine = ServingEngine(
@@ -214,8 +261,18 @@ class MultiTenantServer:
         loaded on the caller's thread, and prefetches whose predicted
         window expired without a request are cancelled (releasing their
         in-flight memory claim).  Without a loader this is the PR-1
-        synchronous proactive load."""
+        synchronous proactive load.
+
+        This is also where the RNNs get *trained*: a predictor with
+        enough fresh inter-arrival history (``fit_due``) is handed to
+        the loader's background fit worker — the live path runs on the
+        mean-gap fallback until the first fit lands, then on the
+        trained RNN, and never blocks on training."""
         for name, tr in self.tenants.items():
+            if self.loader is not None and tr.predictor.fit_due():
+                fut = self.loader.submit_fit(tr.predictor)
+                if fut is not None and self.sync_predictor_fits:
+                    fut.result()  # lands at this exact virtual instant
             t_pred = tr.predictor.predict_next_time()
             self.manager.set_prediction(name, t_pred)
             theta = tr.zoo.largest.load_ms
@@ -329,9 +386,31 @@ class MultiTenantServer:
             "kv_downgrades": eng["kv_downgrades"],
             "kv_rejections": eng["kv_rejections"],
             "weight_failures": eng["weight_failures"],
+            # Live predictor quality: window hit rate (per batch
+            # admission, the manager's unit — not per request) +
+            # completed background fits.
+            "prediction_hit_rate": eng["prediction_hit_rate"],
+            "predictor_fits": sum(
+                getattr(t.predictor, "fits", 0)
+                for t in self.tenants.values()),
         }
         for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
-                    "demand_loads", "loads_committed", "load_overlap_ms"):
+                    "demand_loads", "loads_committed", "load_overlap_ms",
+                    "fits_scheduled"):
             if key in eng:
                 out[key] = eng[key]
         return out
+
+
+class MultiTenantServer(EdgeServer):
+    """Deprecated pre-``EdgeServer`` name, kept as a thin shim: identical
+    construction signature, every method delegating to
+    :class:`EdgeServer`.  New code should go through
+    ``EdgeServer.build(ServingConfig(...))``."""
+
+    def __init__(self, *args, **kw):
+        warnings.warn(
+            "MultiTenantServer is deprecated; use EdgeServer (or "
+            "EdgeServer.build(ServingConfig(...)) for declarative "
+            "wiring)", DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kw)

@@ -18,7 +18,7 @@ from repro.core import EdgeMultiAI
 from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.models import transformer as T
-from repro.serving import (Batch, MultiTenantServer, Request,
+from repro.serving import (Batch, EdgeServer, Request,
                            kv_cache_mb, poisson_trace)
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m"]
@@ -29,8 +29,8 @@ def stub_executor(runtime, batch, extra=None):
 
 
 def make_server(budget_mb=1e9, **kw):
-    srv = MultiTenantServer(budget_mb=budget_mb, policy="iws-bfe",
-                            delta_ms=1000.0, **kw)
+    srv = EdgeServer(budget_mb=budget_mb, policy="iws-bfe",
+                     delta_ms=1000.0, **kw)
     for name in TENANTS:
         cfg = get_config(name, reduced=True)
         srv.register(name, cfg, T.init_params(

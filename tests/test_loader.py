@@ -18,7 +18,7 @@ from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.core.policies import iws_bfe
 from repro.core.predictor import SeriesPredictor
 from repro.models import transformer as T
-from repro.serving import (BackgroundLoader, MultiTenantServer, Request,
+from repro.serving import (BackgroundLoader, EdgeServer, Request,
                            poisson_trace)
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m"]
@@ -42,8 +42,8 @@ def stub_executor(runtime, batch, extra=None):
 
 
 def make_server(budget_mb=1e9, **kw):
-    srv = MultiTenantServer(budget_mb=budget_mb, policy="iws-bfe",
-                            delta_ms=1000.0, **kw)
+    srv = EdgeServer(budget_mb=budget_mb, policy="iws-bfe",
+                     delta_ms=1000.0, **kw)
     for name in TENANTS:
         cfg = get_config(name, reduced=True)
         srv.register(name, cfg, T.init_params(

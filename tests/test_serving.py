@@ -7,15 +7,14 @@ import pytest
 from repro.configs import get_config
 from repro.core.predictor import RequestPredictor
 from repro.models import transformer as T
-from repro.serving import Batcher, MultiTenantServer, Request, kv_cache_mb
+from repro.serving import Batcher, EdgeServer, Request, kv_cache_mb
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 
 
 @pytest.fixture(scope="module")
 def server():
-    srv = MultiTenantServer(budget_mb=1e9, policy="iws-bfe",
-                            delta_ms=1000.0)
+    srv = EdgeServer(budget_mb=1e9, policy="iws-bfe", delta_ms=1000.0)
     for name in TENANTS:
         cfg = get_config(name, reduced=True)
         params = T.init_params(

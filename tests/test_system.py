@@ -8,7 +8,7 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.configs.paper_edge import paper_zoos
 from repro.core import generate_workload, simulate
 from repro.models import transformer as T
-from repro.serving import MultiTenantServer, kv_cache_mb
+from repro.serving import EdgeServer, kv_cache_mb
 
 
 def test_public_api_importable():
@@ -20,6 +20,8 @@ def test_public_api_importable():
     import repro.distributed.checkpoint  # noqa: F401
 
     assert set(core.POLICIES) == {"lfe", "bfe", "ws-bfe", "iws-bfe"}
+    assert {"lfe", "bfe", "ws-bfe", "iws-bfe",
+            "batch-bfe"} <= set(core.available_policies())
     assert len(ARCH_NAMES) == 10
 
 
@@ -36,8 +38,7 @@ def test_end_to_end_paper_pipeline():
 
 def test_end_to_end_serving_with_predictors():
     """Tenants served warm after the RNN predictor learns the cadence."""
-    srv = MultiTenantServer(budget_mb=1e9, policy="iws-bfe",
-                            delta_ms=500.0)
+    srv = EdgeServer(budget_mb=1e9, policy="iws-bfe", delta_ms=500.0)
     names = ["tinyllama-1.1b", "mamba2-780m"]
     for n in names:
         cfg = get_config(n, reduced=True)
