@@ -17,12 +17,18 @@ missing from the CSV are hard failures — a silently dropped metric must
 not read as a pass.  Improvements never fail: the gate is one-sided, and
 the committed value should be refreshed deliberately, not ratcheted by
 CI noise.
+
+When ``GITHUB_STEP_SUMMARY`` is set (the bench-smoke job), a
+baseline-vs-PR delta table is appended to the job summary — gated rows
+with their floors and status, plus the ungated measured rows for
+context.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 
 def parse_csv(path: str) -> Dict[str, float]:
@@ -58,22 +64,56 @@ def floor_for(spec: dict) -> Tuple[float, str]:
     return min(floors, key=lambda f: f[0])
 
 
+def write_step_summary(measured: Dict[str, float], baseline: dict,
+                       rows: List[Tuple[str, str]], path: str) -> None:
+    """Append a baseline-vs-PR delta table to the GitHub job summary."""
+    lines = ["## Serving benchmark: baseline vs PR", "",
+             "| metric | baseline | PR | delta | floor | status |",
+             "|---|---:|---:|---:|---:|:---:|"]
+    for name, status in rows:
+        spec = baseline[name]
+        base = float(spec["value"])
+        floor, _ = floor_for(spec)
+        if name in measured:
+            got = measured[name]
+            delta = got - base
+            lines.append(
+                f"| `{name}` | {base:g} | {got:g} | {delta:+g} "
+                f"| {floor:g} | {status} |")
+        else:
+            lines.append(f"| `{name}` | {base:g} | _missing_ | — "
+                         f"| {floor:g} | {status} |")
+    ungated = sorted(set(measured) - set(baseline))
+    if ungated:
+        lines += ["", "ungated rows (context only):", "",
+                  "| metric | PR |", "|---|---:|"]
+        lines += [f"| `{n}` | {measured[n]:g} |" for n in ungated]
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
 def main(csv_path: str, baseline_path: str) -> int:
     measured = parse_csv(csv_path)
     with open(baseline_path) as fh:
         baseline = json.load(fh)
     failures = []
+    summary_rows: List[Tuple[str, str]] = []
     for name, spec in baseline.items():
         floor, how = floor_for(spec)
         if name not in measured:
             failures.append(f"{name}: missing from {csv_path}")
+            summary_rows.append((name, "❌ missing"))
             continue
         got = measured[name]
         status = "OK  " if got >= floor else "FAIL"
         print(f"{status} {name}: measured={got:g} floor={floor:g} ({how})")
+        summary_rows.append((name, "✅" if got >= floor else "❌"))
         if got < floor:
             failures.append(
                 f"{name}: {got:g} < floor {floor:g} ({how})")
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        write_step_summary(measured, baseline, summary_rows, summary_path)
     if failures:
         print("\nbenchmark regression gate FAILED:", file=sys.stderr)
         for f in failures:

@@ -34,6 +34,15 @@ the *same* trace:
   instead of the head-batch snapshot (the A/B for queue-depth-aware
   procurement; compare its ``kv_downgrades`` against the head-batch
   run's).
+* **sharded** — the prefetch engine staging through the mesh-aware
+  :class:`ShardedLoaderChannel` on an 8-way logical mesh: weights shard
+  per device, loads decompose into per-shard stage operations, and
+  per-device budget ledgers bound every chip.  Same total transfer time
+  through the shared host link, so the A/B isolates the per-shard
+  accounting: ``serving/sharded/load_overlap_ms`` must come out >= the
+  single-stream loader's on the same trace (landed shards of cancelled
+  loads are credited honestly; the single-stream loader credits a
+  cancelled load nothing).
 
 Reports requests/sec and per-tenant p50/p95/p99 for the prefetch engine,
 plus the head-to-head ``serving/warm_ratio`` and the measured
@@ -68,14 +77,16 @@ def _warm_compile(srv: EdgeServer, batch_sizes=(1, 2, 3, 4)) -> None:
         tr.set_variant(None)  # leave residency to the manager
 
 
-def _run_engine(prefetch: bool, policy: str = "bfe"):
+def _run_engine(prefetch: bool, policy: str = "bfe",
+                sharded: bool = False):
     """One full engine run over the default Poisson trace."""
     srv = EdgeServer.build(ServingConfig(
         tenants=tuple(TenantSpec(n) for n in TENANTS),
         policy=policy,
         delta_ms=750.0,
         batching=BatchingSpec(max_batch=4, window_ms=50.0),
-        loader=LoaderSpec(prefetch=prefetch),
+        loader=LoaderSpec(prefetch=prefetch, sharded=sharded,
+                          mesh_shape=(8,)),
         # Contended: all-bf16 residency impossible, so BFE keeps
         # evicting; headroom sized to the largest admitted decode cache.
         kv_headroom_shape=(2, PROMPT_LEN + MAX_NEW)))
@@ -97,6 +108,7 @@ def run() -> None:
     srv, stats, wall_s = _run_engine(prefetch=True)
     _, reactive, _ = _run_engine(prefetch=False)
     _, batch_aware, _ = _run_engine(prefetch=True, policy="batch-bfe")
+    sharded_srv, sharded, _ = _run_engine(prefetch=True, sharded=True)
 
     emit("serving/requests_per_sec", stats.get("requests_per_sec", 0.0),
          f"n={stats['requests']} wall={wall_s:.1f}s "
@@ -120,6 +132,22 @@ def run() -> None:
          f"head_kv_downgrades={stats['kv_downgrades']} "
          f"demand_loads={batch_aware['demand_loads']} "
          f"prediction_hit_rate={batch_aware['prediction_hit_rate']:.3f}")
+    # The sharded A/B: same trace, same policy, weights staged per shard
+    # across an 8-way mesh under per-device budgets.  Equal-or-better
+    # warm ratio at equal-or-better measured overlap is the win.
+    led = sharded_srv.manager.state.devices
+    emit("serving/sharded/warm_ratio", sharded["warm_ratio"],
+         f"single_stream={stats['warm_ratio']:.3f} "
+         f"mesh=8 shards_landed={sharded['shards_landed']} "
+         f"prefetch_shrunk={sharded['prefetch_shrunk']} "
+         f"demand_loads={sharded['demand_loads']} "
+         f"device_budget={led.budgets_mb[0]:.2f}MB")
+    emit("serving/sharded/load_overlap_ms", sharded["load_overlap_ms"],
+         f"single_stream={stats['load_overlap_ms']:.6g} "
+         f"loads_committed={sharded['loads_committed']} "
+         f"prefetch_wasted={sharded['prefetch_wasted']} "
+         f"per_shard_credit="
+         f"{sharded['load_overlap_ms'] - stats['load_overlap_ms']:.6g}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

@@ -1,16 +1,17 @@
 """Quickstart: the serving framework in ~30 lines.
 
-One declarative config -> a fully wired multi-tenant edge server.  The
-sim-time executor makes this deterministic and XLA-free (swap
-``executor="real"`` to run actual quantized models); everything else —
-policy registry, background prefetch pipeline, KV-charged admission —
-is exactly the production path.
+One declarative config -> a fully wired multi-tenant edge server on a
+4-chip mesh.  The sim-time executor makes this deterministic and
+XLA-free (swap ``executor="real"`` to run actual quantized models);
+everything else — policy registry, background prefetch pipeline,
+per-shard staging under per-device budgets, KV-charged admission — is
+exactly the production path.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from repro.serving import poisson_trace
-from repro.serving.api import (BatchingSpec, EdgeServer, ServingConfig,
-                               TenantSpec)
+from repro.serving.api import (BatchingSpec, EdgeServer, LoaderSpec,
+                               ServingConfig, TenantSpec)
 
 config = ServingConfig(
     # Two LM tenants; each gets a bf16 + int8 model zoo.
@@ -20,11 +21,16 @@ config = ServingConfig(
     delta_ms=750.0,              # prediction-window half-width
     batching=BatchingSpec(max_batch=4, window_ms=20.0),
     executor="sim",              # deterministic virtual service times
+    loader=LoaderSpec(sharded=True, mesh_shape=(4,)),  # 4-way TP mesh:
+                                 # weights shard per chip, loads stage
+                                 # per shard, budgets ledger per device
     kv_headroom_shape=(2, 12),   # budget headroom for a (2, 12) cache
 )                                # budget_mb=None -> derived contention
 
 server = EdgeServer.build(config)          # register + wire + start
-print(f"budget {server.budget_mb:.2f} MB, "
+ledger = server.manager.state.devices
+print(f"budget {server.budget_mb:.2f} MB "
+      f"({ledger.n_devices} chips x {ledger.budgets_mb[0]:.2f} MB), "
       f"policy {server.manager.policy.name}")
 
 # A Poisson per-tenant trace drives the engine; the RNN predictors
@@ -39,4 +45,5 @@ server.close()
 print(f"{stats['requests']} requests: warm={stats['warm_ratio']:.0%} "
       f"prefetch_hits={stats['prefetch_hits']} "
       f"demand_loads={stats['demand_loads']} "
+      f"shards_landed={stats['shards_landed']} "
       f"prediction_hit_rate={stats['prediction_hit_rate']:.0%}")

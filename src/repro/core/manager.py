@@ -314,6 +314,32 @@ class EdgeMultiAI:
             if self._loader:
                 self._loader(app, nxt)
             self_downgraded = True
+        # Sharded mesh: a synchronous admission load is planned against
+        # the *global* budget (policies are device-blind), so the chosen
+        # variant's shard may overshoot one chip — downgrade until every
+        # shard fits its device, the same resolution an unfundable
+        # sharded background load feeds into.
+        while (self.policy is not None and self.state.devices is not None
+               and t.loaded is not None
+               and not self.state.devices.fits_variant(app, t.loaded)
+               and (nxt := t.zoo.next_smaller(t.loaded)) is not None):
+            self.state.load(app, nxt)
+            if self._loader:
+                self._loader(app, nxt)
+            self_downgraded = True
+        if (self.state.devices is not None and t.loaded is not None
+                and not self.state.devices.fits_variant(app, t.loaded)):
+            # Even the smallest shard overflows its chip: reject rather
+            # than commit over-budget per-device state (the global-path
+            # analogue is an unprocurable plan — a counted weight
+            # failure, never an invariant violation later).
+            self.state.load(app, None)
+            if self._loader:
+                self._loader(app, None)
+            rec.warm, rec.failed, rec.bits = False, True, None
+            rec.accuracy, rec.latency_ms = 0.0, math.inf
+            return BatchAdmission(app, now, 0.0, False, True, None,
+                                  self_downgraded, kv_rejected=False)
         if self.state.free_mb < kv_mb and self.policy is not None:
             # Desperation: rejecting the batch is the worst outcome, so
             # the window/history protections yield before the cache does.

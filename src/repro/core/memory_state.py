@@ -14,11 +14,123 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.model_zoo import ModelVariant, ModelZoo
 
 INF = math.inf
+
+
+class DeviceLedger:
+    """Per-device memory accounting for a sharded (multi-chip) mesh.
+
+    The global ``MemoryState`` budget answers "does it fit on the box";
+    this ledger answers "does every *shard* fit on its chip" — tensor
+    parallelism replicates some leaves (norms, odd-width projections), so
+    a tenant's per-device footprint is ``split_fn(app, variant)[d]``, not
+    ``size_mb / n``.  The sharded loader checks :meth:`fits` before
+    claiming, charges whole-load claims up front, and releases them
+    shard-by-shard on cancel; committed weights are re-derived from the
+    loaded variant on every :meth:`on_load` so evictions and downgrades
+    enacted by *any* caller (policies, desperation, admission) stay in
+    sync without those callers knowing devices exist.
+
+    Per-device budgets bound weights + in-flight claims; KV caches remain
+    a global charge (decode caches follow their own ``cache_specs`` and
+    the serving budget already carries explicit KV headroom).
+    """
+
+    def __init__(self, budgets_mb: Tuple[float, ...],
+                 split_fn: Callable[[str, ModelVariant],
+                                    Tuple[float, ...]]):
+        if not budgets_mb or any(b < 0 for b in budgets_mb):
+            raise ValueError(f"bad device budgets: {budgets_mb}")
+        self.budgets_mb = tuple(float(b) for b in budgets_mb)
+        self.split_fn = split_fn
+        self.n_devices = len(self.budgets_mb)
+        # Committed weight shards per app (re-derived on every load).
+        self.weights: Dict[str, Tuple[float, ...]] = {}
+        # In-flight claims per app per device (sharded loads mid-staging).
+        self.inflight: Dict[str, List[float]] = {}
+
+    # -- queries ---------------------------------------------------------
+    def split(self, app: str, variant: Optional[ModelVariant]
+              ) -> Tuple[float, ...]:
+        if variant is None:
+            return (0.0,) * self.n_devices
+        shards = tuple(self.split_fn(app, variant))
+        if len(shards) != self.n_devices:
+            raise ValueError(
+                f"split_fn returned {len(shards)} shards for "
+                f"{self.n_devices} devices")
+        return shards
+
+    def used_mb(self, device: int) -> float:
+        return (sum(w[device] for w in self.weights.values())
+                + sum(c[device] for c in self.inflight.values()))
+
+    def device_used(self) -> Tuple[float, ...]:
+        """Weights + in-flight claims per device (the invariant's LHS)."""
+        return tuple(self.used_mb(d) for d in range(self.n_devices))
+
+    def free_mb(self, device: int) -> float:
+        return self.budgets_mb[device] - self.used_mb(device)
+
+    def fits(self, claims: Tuple[float, ...]) -> bool:
+        """Would charging ``claims[d]`` on each device stay in budget?
+        One overfull shard fails the whole load — cleanly, before any
+        claim lands."""
+        return all(self.free_mb(d) >= claims[d] - 1e-9
+                   for d in range(self.n_devices))
+
+    def fits_variant(self, app: str, variant: Optional[ModelVariant]
+                     ) -> bool:
+        """Would swapping ``app``'s committed weights to ``variant`` keep
+        every device in budget (admission-path downgrade check)?"""
+        if variant is None:
+            return True
+        cur = self.weights.get(app, (0.0,) * self.n_devices)
+        new = self.split(app, variant)
+        return all(self.free_mb(d) + cur[d] >= new[d] - 1e-9
+                   for d in range(self.n_devices))
+
+    # -- mutations -------------------------------------------------------
+    def on_load(self, app: str, variant: Optional[ModelVariant]) -> None:
+        """``MemoryState.load`` observed a (re)load: re-derive the app's
+        committed shard footprint from whatever is now loaded."""
+        if variant is None:
+            self.weights.pop(app, None)
+        else:
+            self.weights[app] = self.split(app, variant)
+
+    def reserve_inflight(self, app: str, claims: Tuple[float, ...]) -> None:
+        """Claim a whole sharded load's per-device footprint at enqueue
+        (callers check :meth:`fits` first — an unfundable shard is a
+        planning decision, never an assert)."""
+        cur = self.inflight.setdefault(app, [0.0] * self.n_devices)
+        for d, mb in enumerate(claims):
+            if mb < 0:
+                raise ValueError(f"negative shard claim: {claims}")
+            cur[d] += mb
+
+    def release_inflight_shard(self, app: str, device: int,
+                               mb: float) -> None:
+        """Return one shard's claim to its device pool (commit converts
+        it to weights via :meth:`on_load`; cancel walks shards in device
+        order releasing each)."""
+        cur = self.inflight.get(app)
+        if cur is None:
+            return
+        cur[device] = max(0.0, cur[device] - mb)
+        if all(c <= 1e-12 for c in cur):
+            del self.inflight[app]
+
+    def check_invariant(self) -> None:
+        for d in range(self.n_devices):
+            if self.used_mb(d) > self.budgets_mb[d] + 1e-6:
+                raise AssertionError(
+                    f"device {d} over budget: {self.used_mb(d):.2f}MB "
+                    f"> {self.budgets_mb[d]:.2f}MB")
 
 
 @dataclass
@@ -49,6 +161,12 @@ class MemoryState:
     # room for the cache, but excluded from used_mb/check_invariant — it
     # is a reservation *request*, not committed memory.
     pending_mb: float = 0.0
+    # Per-device shard accounting for a sharded mesh (None = single
+    # device).  ``load`` keeps it in sync; the global invariant stays the
+    # authority here because admission may transiently overshoot a single
+    # chip mid-downgrade — per-device limits are enforced at reservation
+    # time (sharded loader) and at admission resolution (manager).
+    devices: Optional[DeviceLedger] = None
 
     @property
     def weights_mb(self) -> float:
@@ -90,6 +208,8 @@ class MemoryState:
     # -- mutations (the manager calls these after a policy decision) -------
     def load(self, app: str, variant: Optional[ModelVariant]) -> None:
         self.tenants[app].loaded = variant
+        if self.devices is not None:
+            self.devices.on_load(app, variant)
         self.check_invariant()
 
     def reserve_kv(self, app: str, mb: float) -> None:

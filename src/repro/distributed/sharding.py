@@ -11,7 +11,7 @@ awkward ones (hymba's 25 heads / 3257-wide in_proj, granite's odd vocab).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -286,3 +286,98 @@ def named(mesh: Mesh, spec_tree: PyTree) -> PyTree:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Logical meshes and per-device weight footprints (serving-side accounting)
+# ---------------------------------------------------------------------------
+class LogicalMesh:
+    """Duck-typed mesh: a shape mapping + axis names, nothing more.
+
+    The spec rules above only read ``mesh.shape[name]``, so serving-side
+    accounting (per-device memory ledgers, shard-size math) can run them
+    without ever touching jax device state — a sharded sim run needs no
+    devices at all.  ``jax.sharding.Mesh`` satisfies the same interface,
+    so callers with real devices pass one interchangeably."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+        if any(v < 1 for v in self.shape.values()):
+            raise ValueError(f"mesh axes must be >= 1: {self.shape}")
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+    def __repr__(self) -> str:
+        return f"LogicalMesh({self.shape})"
+
+
+def serving_mesh(mesh_shape: Tuple[int, ...]) -> LogicalMesh:
+    """The serving stack's mesh convention: a 1-D shape is pure tensor
+    parallelism (``("model",)``); a 2-D shape is ``("data", "model")``."""
+    if len(mesh_shape) == 1:
+        return LogicalMesh({"model": mesh_shape[0]})
+    if len(mesh_shape) == 2:
+        return LogicalMesh({"data": mesh_shape[0], "model": mesh_shape[1]})
+    raise ValueError(
+        f"serving mesh_shape must be 1-D or 2-D, got {mesh_shape}")
+
+
+def weight_shard_fraction(cfg: ModelConfig, mesh, *,
+                          model_axis: str = "model",
+                          dtype=None) -> float:
+    """Fraction of a tenant's weight bytes resident on ONE device of the
+    mesh under :func:`param_specs`: sharded leaves contribute ``1/m`` of
+    their bytes per model-slice, replicated leaves (norms, odd-width
+    projections that don't divide the axis) a full copy.  Always
+    ``>= 1/mesh.size`` — the excess is the replication overhead a
+    per-device memory ledger must budget for.  Model slices are
+    symmetric, so one fraction describes every device."""
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+
+    abstract = T.abstract_params(cfg, dtype or jnp.bfloat16)
+    dp_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    if not dp_axes:
+        # Model-only serving mesh: give the rules a trivial data axis.
+        mesh = LogicalMesh({"data": 1,
+                            model_axis: mesh.shape[model_axis]})
+        dp_axes = ("data",)
+    specs = param_specs(cfg, abstract, mesh, model_axis=model_axis,
+                        dp_axes=dp_axes, fsdp=False)
+    total = 0
+    per_device = 0.0
+    for leaf, spec in zip(jax.tree.leaves(abstract),
+                          jax.tree.leaves(
+                              specs,
+                              is_leaf=lambda x: isinstance(x, P))):
+        nbytes = 1
+        for d in leaf.shape:
+            nbytes *= d
+        nbytes *= leaf.dtype.itemsize
+        div = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= mesh.shape[ax]
+        total += nbytes
+        per_device += nbytes / div
+    return per_device / total if total else 1.0
+
+
+def variant_shard_mb(size_mb: float, n_devices: int,
+                     fraction: Optional[float] = None) -> Tuple[float, ...]:
+    """Per-device resident MB for one zoo variant staged across
+    ``n_devices``: each device holds ``fraction`` of the variant
+    (``1/n`` for an ideal even split; :func:`weight_shard_fraction` for
+    the real spec-derived figure including replication).  The serving
+    loader stages one such shard per device stream."""
+    f = (1.0 / n_devices) if fraction is None else fraction
+    return tuple(size_mb * f for _ in range(n_devices))

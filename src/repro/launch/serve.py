@@ -15,8 +15,8 @@ import numpy as np
 
 from repro.core.policies import available_policies
 from repro.serving import Batcher, Request
-from repro.serving.api import (BatchingSpec, EdgeServer, ServingConfig,
-                               TenantSpec)
+from repro.serving.api import (BatchingSpec, EdgeServer, LoaderSpec,
+                               ServingConfig, TenantSpec)
 
 
 def main() -> None:
@@ -31,6 +31,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sim", action="store_true",
                     help="sim-time executors (no XLA, deterministic)")
+    ap.add_argument("--sharded-mesh", type=int, nargs="+", default=None,
+                    metavar="N", help="serve from a device mesh, e.g. "
+                    "'--sharded-mesh 8' (8-way tensor parallel): weights "
+                    "shard per chip, loads stage per shard under "
+                    "per-device budgets")
     args = ap.parse_args()
 
     rng = np.random.default_rng(args.seed)
@@ -40,7 +45,14 @@ def main() -> None:
         policy=args.policy,
         delta_ms=2000.0,
         batching=BatchingSpec(max_batch=4),
+        loader=(LoaderSpec(sharded=True,
+                           mesh_shape=tuple(args.sharded_mesh))
+                if args.sharded_mesh else LoaderSpec()),
         executor="sim" if args.sim else "real"))
+    if server.manager.state.devices is not None:
+        led = server.manager.state.devices
+        print(f"mesh: {led.n_devices} chips x "
+              f"{led.budgets_mb[0]:.2f}MB device budget")
     cfgs = {}
     for name in args.tenants:
         cfgs[name] = server.tenants[name].cfg

@@ -9,6 +9,8 @@ from repro.serving.engine import (EngineEvent, LoaderChannel, RequestResult,
 from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
 from repro.serving.server import (EdgeServer, MultiTenantServer, ServeResult,
                                   TenantRuntime)
+from repro.serving.sharded_loader import (ShardedInflightLoad,
+                                          ShardedLoaderChannel, ShardStage)
 
 __all__ = ["Batch", "Batcher", "Request", "EdgeServer", "MultiTenantServer",
            "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
@@ -16,4 +18,5 @@ __all__ = ["Batch", "Batcher", "Request", "EdgeServer", "MultiTenantServer",
            "trace_from_workload", "BackgroundLoader", "InflightLoad",
            "LoadRecord", "ServingConfig", "TenantSpec", "PredictorSpec",
            "BatchingSpec", "LoaderSpec", "SimTenant", "build_server",
-           "ServingHost", "TenantExecutor", "LoaderChannel"]
+           "ServingHost", "TenantExecutor", "LoaderChannel",
+           "ShardedLoaderChannel", "ShardedInflightLoad", "ShardStage"]

@@ -89,8 +89,30 @@ class BatchingSpec:
 @dataclass(frozen=True)
 class LoaderSpec:
     """``prefetch=False`` is the reactive baseline: no background loader,
-    every weight move synchronous inside the admit path."""
+    every weight move synchronous inside the admit path.
+
+    ``sharded=True`` serves from a device mesh: tenant weights shard
+    across ``mesh_shape`` (1-D = pure tensor parallel ``("model",)``,
+    2-D = ``("data", "model")``) via the real partition rules, the
+    loader stages per-shard on per-device streams, and ``MemoryState``
+    gains per-chip budget ledgers (``device_budget_mb`` per chip; None
+    derives a budget that covers the replication overhead, so tighter
+    values deliberately exercise the whole-load-failure path).  Requires
+    ``prefetch=True`` — the reactive engine has no staging channel to
+    decompose."""
     prefetch: bool = True
+    sharded: bool = False
+    mesh_shape: Tuple[int, ...] = (8,)
+    device_budget_mb: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "mesh_shape", tuple(self.mesh_shape))
+        if self.sharded and not self.prefetch:
+            raise ValueError(
+                "LoaderSpec(sharded=True) requires prefetch=True")
+        if self.sharded and not (1 <= len(self.mesh_shape) <= 2):
+            raise ValueError(
+                f"mesh_shape must be 1-D or 2-D, got {self.mesh_shape}")
 
 
 @dataclass(frozen=True)
@@ -236,7 +258,10 @@ def build_server(config: ServingConfig, cls=None):
               straggler_deadline_s=config.straggler_deadline_s,
               max_batch=config.batching.max_batch,
               batch_window_ms=config.batching.window_ms,
-              prefetch=config.loader.prefetch)
+              prefetch=config.loader.prefetch,
+              sharded_mesh=(config.loader.mesh_shape
+                            if config.loader.sharded else None),
+              device_budget_mb=config.loader.device_budget_mb)
     ps = config.predictor
     for spec in config.tenants:
         from repro.configs import get_config

@@ -79,6 +79,7 @@ class LoaderChannel(Protocol):
     on_event: Optional[Callable[[float, str, str, float], None]]
     prefetch_hits: int
     prefetch_wasted: int
+    prefetch_shrunk: int
     demand_loads: int
     loads_committed: int
     load_overlap_ms: float
@@ -88,6 +89,8 @@ class LoaderChannel(Protocol):
                 demand: bool = ..., predicted_ms: float = ...) -> Any: ...
     def reap(self, now_ms: float) -> List[Any]: ...
     def cancel(self, app: str, now_ms: float) -> Any: ...
+    def shrink_inflight(self, app: str, variant: Any,
+                        now_ms: float) -> Any: ...
     def cancel_stale(self, now_ms: float, delta_ms: float,
                      has_queued: Callable[[str], bool]) -> int: ...
     def peek_use(self, app: str) -> Any: ...
@@ -145,15 +148,20 @@ class RequestResult:
 class EngineEvent:
     """Audit-trail entry emitted at every engine state change; the
     invariant tests replay these to check ``used_mb + inflight_mb ≤
-    budget_mb`` at every point in the run, not just at the end."""
+    budget_mb`` at every point in the run, not just at the end — and,
+    on a sharded mesh, per-device ``weights + claims ≤ chip budget``."""
     t_ms: float
-    # submit | admit | reject | retire | prefetch | demand | load | cancel
+    # submit | admit | reject | retire | prefetch | demand | load |
+    # cancel | shrink
     kind: str
     app: str
     kv_mb: float
     used_mb: float
     free_mb: float
     inflight_mb: float = 0.0  # background-load claims at event time
+    # Per-device weights + in-flight claims when a DeviceLedger is
+    # installed (sharded mesh); None on single-device runs.
+    device_mb: Optional[Tuple[float, ...]] = None
 
 
 Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
@@ -214,7 +222,9 @@ class ServingEngine:
         st = self.host.manager.state
         self.events.append(EngineEvent(
             t_ms, kind, app, kv_mb, st.used_mb, st.free_mb,
-            st.inflight_mb))
+            st.inflight_mb,
+            device_mb=(st.devices.device_used()
+                       if st.devices is not None else None)))
 
     def _loader_event(self, t_ms: float, kind: str, app: str,
                       mb: float) -> None:
@@ -365,31 +375,54 @@ class ServingEngine:
                 max_batch=self.max_batch)
             plan = mgr.plan_demand(app, now, demand=demand)
             if plan is None:
-                # Speculation yields to demand: cancel predictor-driven
-                # prefetches (least-credible prediction first) until the
-                # real request's load becomes fundable — their in-flight
-                # claims must never starve actual queued work.
-                for guess in sorted(
+                # Speculation yields to demand — but gradually: first
+                # shrink predictor-driven prefetches to their smallest
+                # variant (the guess keeps its warm start, degraded, and
+                # most of the claim comes back), then cancel outright
+                # (least-credible prediction first) until the real
+                # request's load becomes fundable — speculative claims
+                # must never starve actual queued work.
+                def guesses():
+                    return sorted(
                         (a for a, ld in self.loader.inflight.items()
                          if not ld.demand),
-                        key=lambda a: -self.loader.inflight[a].predicted_ms):
-                    self.loader.cancel(guess, now)
+                        key=lambda a: -self.loader.inflight[a]
+                        .predicted_ms)
+                for guess in guesses():
+                    small = mgr.state.tenants[guess].zoo.smallest
+                    if self.loader.shrink_inflight(guess, small,
+                                                   now) is None:
+                        continue
                     plan = mgr.plan_demand(app, now, demand=demand)
                     if plan is not None:
                         break
+                if plan is None:
+                    for guess in guesses():
+                        self.loader.cancel(guess, now)
+                        plan = mgr.plan_demand(app, now, demand=demand)
+                        if plan is not None:
+                            break
             if plan is not None:
                 self.loader.enqueue(plan, now, demand=True)
 
     def _reap_loads(self, now: float) -> None:
         """Commit loads whose virtual transfer has finished and measure
         how much of each load interval was hidden behind *other*
-        tenants' execution — the paper's overlap claim, quantified."""
+        tenants' execution — the paper's overlap claim, quantified.
+        Sharded loads measure per shard interval (which also credits the
+        landed shards of a cancelled load: that transfer was real and
+        really was hidden); single-stream loads over the whole load."""
         for rec in self.loader.reap(now):
-            t0, t1 = rec.t_enqueue_ms, rec.t_ready_ms
-            busy = sum(min(e, t1) - max(s, t0)
-                       for s, e, a in self._spans
-                       if a != rec.app and e > t0 and s < t1)
-            rec.overlap_ms = min(busy, rec.load_ms)
+            intervals = (rec.shard_intervals
+                         or ((rec.t_enqueue_ms, rec.t_ready_ms,
+                              rec.load_ms),))
+            overlap = 0.0
+            for t0, t1, cap in intervals:
+                busy = sum(min(e, t1) - max(s, t0)
+                           for s, e, a in self._spans
+                           if a != rec.app and e > t0 and s < t1)
+                overlap += min(busy, cap)
+            rec.overlap_ms = overlap
             self.loader.load_overlap_ms += rec.overlap_ms
         horizon = min((ld.t_enqueue_ms
                        for ld in self.loader.inflight.values()),
@@ -490,10 +523,14 @@ class ServingEngine:
             out.update(
                 prefetch_hits=self.loader.prefetch_hits,
                 prefetch_wasted=self.loader.prefetch_wasted,
+                prefetch_shrunk=self.loader.prefetch_shrunk,
                 demand_loads=self.loader.demand_loads,
                 loads_committed=self.loader.loads_committed,
                 load_overlap_ms=self.loader.load_overlap_ms,
                 fits_scheduled=self.loader.fits_scheduled)
+            shards = getattr(self.loader, "shards_landed", None)
+            if shards is not None:
+                out["shards_landed"] = shards
         if not self.results:
             out["warm_ratio"] = 0.0
             return out
@@ -528,9 +565,12 @@ class ServingEngine:
     def check_event_invariant(self, budget_mb: Optional[float] = None
                               ) -> None:
         """Every recorded event must respect the memory budget —
-        committed memory *and* in-flight background-load claims."""
+        committed memory *and* in-flight background-load claims; on a
+        sharded mesh, every chip's weights + shard claims must respect
+        its per-device budget too."""
         budget = (budget_mb if budget_mb is not None
                   else self.host.manager.state.budget_mb)
+        ledger = self.host.manager.state.devices
         for ev in self.events:
             if ev.used_mb + ev.inflight_mb > budget + 1e-6:
                 raise AssertionError(
@@ -538,6 +578,14 @@ class ServingEngine:
                     f"({ev.kind} {ev.app}): {ev.used_mb:.2f}MB "
                     f"+ {ev.inflight_mb:.2f}MB in-flight "
                     f"> {budget:.2f}MB")
+            if ev.device_mb is None or ledger is None:
+                continue
+            for d, mb in enumerate(ev.device_mb):
+                if mb > ledger.budgets_mb[d] + 1e-6:
+                    raise AssertionError(
+                        f"device {d} over budget at t={ev.t_ms:.1f}ms "
+                        f"({ev.kind} {ev.app}): {mb:.2f}MB "
+                        f"> {ledger.budgets_mb[d]:.2f}MB")
 
 
 # ---------------------------------------------------------------------------

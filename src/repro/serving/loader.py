@@ -39,6 +39,9 @@ Lifecycle of one load::
         |-- reap(now >= ready_ms)  ->  committed (state.load, charge
         |                              released, awaiting first use)
         |       |-- first admit    ->  prefetch hit (warm) or demand-cold
+        |-- shrink_inflight(..)    ->  claim shrunk to a smaller variant
+        |                              (one smaller transfer instead of
+        |                              cancel-then-demand)
         |-- cancel(..)             ->  charge released, device restored,
                                        counted as wasted prefetch
 """
@@ -47,7 +50,7 @@ from __future__ import annotations
 import math
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.model_zoo import ModelVariant
 from repro.core.policies import ProcurePlan
@@ -81,6 +84,12 @@ class LoadRecord:
     t_ready_ms: float
     demand: bool
     overlap_ms: float = 0.0  # other tenants' execution inside the window
+    # Per-shard transfer intervals ``(t0, t1, cap_ms)`` for mesh-sharded
+    # loads; None = one single-stream interval spanning the whole load.
+    # The engine measures overlap per interval, so a sharded load's
+    # landed shards count honestly even when the load never commits.
+    shard_intervals: Optional[Tuple[Tuple[float, float, float], ...]] = None
+    partial: bool = False  # landed shards of a cancelled sharded load
 
 
 class BackgroundLoader:
@@ -111,6 +120,7 @@ class BackgroundLoader:
         # Counters surfaced through engine/server stats.
         self.prefetch_hits = 0  # predictor-staged load served warm
         self.prefetch_wasted = 0  # cancelled before any request used it
+        self.prefetch_shrunk = 0  # in-flight load shrunk under pressure
         self.demand_loads = 0  # cold admits staged off the loop instead
         self.loads_committed = 0
         self.load_overlap_ms = 0.0
@@ -238,6 +248,45 @@ class BackgroundLoader:
         if rec is not None and warm and not rec.demand:
             self.prefetch_hits += 1
         return rec
+
+    def shrink_inflight(self, app: str, variant: Optional[ModelVariant],
+                        now_ms: float) -> Optional[InflightLoad]:
+        """Shrink an in-flight *speculative* load to a smaller variant
+        under memory pressure: release the claim difference and restage
+        the smaller transfer from ``now``.  If the prediction was right,
+        the tenant still warm-starts (degraded) — one smaller transfer
+        instead of cancel-now-plus-demand-load-later.  Demand loads are
+        never shrunk (their variant was planned against a waiting
+        batch's cache needs).  Returns the updated load, or None when
+        there is nothing to shrink (not in flight / not smaller / the
+        target is not above what is already resident)."""
+        ld = self.inflight.get(app)
+        if ld is None or ld.demand or variant is None:
+            return None
+        if variant.size_mb >= ld.variant.size_mb:
+            return None
+        state = self.manager.state
+        loaded = state.tenants[app].loaded
+        new_charge = variant.size_mb - (loaded.size_mb if loaded else 0.0)
+        if new_charge <= 0.0:
+            return None  # below residency: that is a cancel, not a shrink
+        freed = ld.charge_mb - new_charge
+        state.release_inflight(app, freed)
+        # Restage the smaller variant; if the big move already ran (or is
+        # running) the new stage lands after it on the same worker, so
+        # the device converges to the shrunk variant either way.  The
+        # overlap window restarts at *now*: the abandoned transfer hid
+        # nothing worth crediting, and measuring the small load over the
+        # big load's interval would inflate load_overlap_ms.
+        ld.future.cancel()
+        ld.variant = variant
+        ld.charge_mb = new_charge
+        ld.t_enqueue_ms = now_ms
+        ld.ready_ms = now_ms + variant.load_ms
+        ld.future = self.stage(app, variant)
+        self.prefetch_shrunk += 1
+        self._emit(now_ms, "shrink", app, -freed)
+        return ld
 
     def cancel(self, app: str, now_ms: float) -> Optional[InflightLoad]:
         """The predictor was wrong (or the caller changed its mind):

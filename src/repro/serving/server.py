@@ -164,13 +164,21 @@ class EdgeServer:
                  delta_ms: float = 500.0, straggler_deadline_s: float = 30.0,
                  max_batch: int = 8, batch_window_ms: float = 0.0,
                  prefetch: bool = True, history_ms: float = 3000.0,
-                 fallback="desperation"):
+                 fallback="desperation",
+                 sharded_mesh: Optional[Tuple[int, ...]] = None,
+                 device_budget_mb: Optional[float] = None):
         self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
         self.fallback = fallback
         self.delta_ms = delta_ms
         self.history_ms = history_ms
+        # Sharded multi-device serving: a mesh shape ((8,) = 8-way tensor
+        # parallel) swaps the loader for the per-shard staging channel
+        # and installs per-device budget ledgers; None = single device.
+        self.sharded_mesh = (tuple(sharded_mesh)
+                             if sharded_mesh is not None else None)
+        self.device_budget_mb = device_budget_mb
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
@@ -241,11 +249,50 @@ class EdgeServer:
             zoos, self.budget_mb, policy=self.policy,
             delta_ms=self.delta_ms, history_ms=self.history_ms,
             loader=loader_cb, fallback=self.fallback)
-        self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
-                       if self.prefetch else None)
+        if self.sharded_mesh is not None:
+            if not self.prefetch:
+                raise ValueError(
+                    "sharded serving requires the background loader "
+                    "(prefetch=True): the reactive engine has no "
+                    "staging channel to decompose per shard")
+            self.manager.state.devices = self._device_ledger()
+            from repro.serving.sharded_loader import ShardedLoaderChannel
+            self.loader = ShardedLoaderChannel(
+                self.manager,
+                n_devices=self.manager.state.devices.n_devices,
+                stage_fn=stage)
+        else:
+            self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
+                           if self.prefetch else None)
         self.engine = ServingEngine(
             self, max_batch=self.max_batch,
             batch_window_ms=self.batch_window_ms, loader=self.loader)
+
+    def _device_ledger(self):
+        """Per-device budgets + spec-derived shard splits for the mesh.
+
+        Each tenant's per-chip fraction comes from the real partition
+        rules (``weight_shard_fraction`` — replicated leaves included),
+        so the ledger budgets what a chip actually holds.  The default
+        per-device budget covers the worst tenant's replication overhead
+        over the even ``budget/n`` split: anything fundable globally is
+        then fundable per-chip, and tighter (explicit) budgets surface
+        as clean whole-load failures in the sharded loader."""
+        from repro.core.memory_state import DeviceLedger
+        from repro.distributed import sharding as SH
+
+        mesh = SH.serving_mesh(self.sharded_mesh)
+        n = mesh.size
+        fracs = {name: SH.weight_shard_fraction(t.cfg, mesh)
+                 for name, t in self.tenants.items()}
+        per_dev = (self.device_budget_mb
+                   if self.device_budget_mb is not None
+                   else self.budget_mb / n * max(
+                       f * n for f in fracs.values()))
+        return DeviceLedger(
+            (per_dev,) * n,
+            split_fn=lambda app, v: SH.variant_shard_mb(
+                v.size_mb, n, fracs[app]))
 
     def close(self) -> None:
         """Drain and shut down the background staging worker."""
@@ -395,10 +442,14 @@ class EdgeServer:
                 for t in self.tenants.values()),
         }
         for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
-                    "demand_loads", "loads_committed", "load_overlap_ms",
-                    "fits_scheduled"):
+                    "prefetch_shrunk", "demand_loads", "loads_committed",
+                    "load_overlap_ms", "fits_scheduled", "shards_landed"):
             if key in eng:
                 out[key] = eng[key]
+        if self.manager.state.devices is not None:
+            led = self.manager.state.devices
+            out["device_used_mb"] = led.device_used()
+            out["device_budget_mb"] = led.budgets_mb[0]
         return out
 
 

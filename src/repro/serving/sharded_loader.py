@@ -1,0 +1,380 @@
+"""Mesh-aware sharded loader: per-shard staging of tenant weights across
+a multi-chip edge box, behind the same :class:`LoaderChannel` protocol.
+
+On a single device the background loader hides one tenant's weight
+transfer behind the other tenants' execution.  On a multi-chip box the
+transfer itself decomposes: tensor parallelism places a *shard* of every
+variant on each chip (``repro.distributed.sharding`` — replicated leaves
+included, so a shard is ``weight_shard_fraction``, not ``1/n``), and the
+loader stages one shard per device stream.  What that buys, concretely:
+
+* **Per-shard virtual progress.**  The host→device link is shared, so
+  shard ``k``'s transfer occupies the virtual slot ``[t + Σ_{j<k} ms_j,
+  t + Σ_{j≤k} ms_j]`` — the *total* load time matches the single-stream
+  loader (same bytes through the same link; the per-device streams
+  overlap only the wall-clock device writes).  But progress is now
+  observable per shard: each shard lands at its own schedule point, and
+  ``load_overlap_ms`` is measured per shard — a load cancelled with 3 of
+  8 shards landed still hid 3 shards of real transfer behind execution,
+  and is credited for exactly that (the single-stream loader credits a
+  cancelled load nothing).
+
+* **Whole-load claims, per-shard release.**  ``enqueue`` charges the
+  load's full marginal footprint once (global ``inflight_mb`` plus one
+  claim per device in the :class:`~repro.core.memory_state.DeviceLedger`);
+  ``cancel`` walks the shards in device order releasing each claim —
+  the accounting a cross-device victim-migration pass will need.
+
+* **Per-device budgets.**  A shard that does not fit on its chip fails
+  the whole load *cleanly* (no claims land, ``enqueue`` returns None),
+  which routes the tenant through the existing admission downgrade /
+  desperation path — exactly how an unfundable single-device load fails.
+
+Physical staging: per-shard ops ride worker-per-device pools (the
+"per-chip DMA streams"); the whole-variant commit move rides the base
+class's single staging channel, so device mutations keep landing in
+accounting order.  The default per-shard op is a no-op hook —
+``TenantRuntime.set_variant`` still moves whole variants at commit; true
+per-shard ``device_put`` placement for the real executor is a ROADMAP
+follow-on.
+"""
+from __future__ import annotations
+
+import math
+from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.model_zoo import ModelVariant
+from repro.core.policies import ProcurePlan
+from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
+
+INF = math.inf
+
+# (app, variant_or_None, device, n_devices) — the per-device stream op.
+ShardStageFn = Callable[[str, Optional[ModelVariant], int, int], None]
+
+
+@dataclass
+class ShardStage:
+    """One device's slice of an in-flight sharded load."""
+    device: int
+    mb: float  # resident MB this shard adds on its device
+    claim_mb: float  # per-device in-flight claim (marginal over loaded)
+    global_mb: float  # this shard's slice of the global inflight charge
+    load_ms: float  # virtual transfer time of this shard
+    t_start_ms: float  # when this shard's slot on the host link opens
+    ready_ms: float  # t_start + load_ms
+    landed: bool = False
+    future: Optional[Future] = None  # the wall-clock per-device stream op
+
+
+@dataclass
+class ShardedInflightLoad(InflightLoad):
+    """An :class:`InflightLoad` decomposed into per-device shard stages
+    (``ready_ms`` is the last shard's landing)."""
+    shards: List[ShardStage] = field(default_factory=list)
+    cancelled: bool = False  # gates the commit move on the staging channel
+
+
+class ShardedLoaderChannel(BackgroundLoader):
+    """Stages tenant weights shard-by-shard across a device mesh.
+
+    Drop-in :class:`LoaderChannel`: the engine drives it exactly like
+    :class:`BackgroundLoader`.  ``shard_fn(app, variant)`` maps a variant
+    to per-device resident MB; it defaults to the manager state's
+    :class:`DeviceLedger` split (when one is installed) or an even
+    ``1/n`` split.  ``stage_shard_fn`` is the per-device stream op.
+    """
+
+    def __init__(self, manager, n_devices: int = 8, *,
+                 stage_fn=None,
+                 shard_fn: Optional[Callable[
+                     [str, ModelVariant], Tuple[float, ...]]] = None,
+                 stage_shard_fn: Optional[ShardStageFn] = None):
+        if n_devices < 1:
+            raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+        super().__init__(manager, stage_fn=stage_fn)
+        self.n_devices = n_devices
+        self._shard_fn = shard_fn
+        self._stage_shard_fn = stage_shard_fn or (
+            lambda app, variant, device, n: None)
+        self._device_pools = [
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix=f"shard-dev{d}")
+            for d in range(n_devices)]
+        # Landed shards of cancelled loads, queued for the engine's
+        # overlap measurement at the next reap (their transfer was real
+        # and really was hidden — the honest half of a wasted prefetch).
+        self._partials: List[LoadRecord] = []
+        self.shards_landed = 0
+
+    # -- shard geometry --------------------------------------------------
+    def _split_mb(self, app: str, variant: Optional[ModelVariant]
+                  ) -> Tuple[float, ...]:
+        if variant is None:
+            return (0.0,) * self.n_devices
+        ledger = self.manager.state.devices
+        if self._shard_fn is not None:
+            return tuple(self._shard_fn(app, variant))
+        if ledger is not None:
+            return ledger.split(app, variant)
+        return tuple(variant.size_mb / self.n_devices
+                     for _ in range(self.n_devices))
+
+    def _build_shards(self, app: str, variant: ModelVariant,
+                      now_ms: float, charge_mb: float
+                      ) -> List[ShardStage]:
+        """Decompose one load: per-device resident MB and claims, plus
+        the shared-host-link virtual schedule (cumulative slots summing
+        to exactly ``variant.load_ms``)."""
+        shards_mb = self._split_mb(app, variant)
+        loaded = self.manager.state.tenants[app].loaded
+        cur_mb = self._split_mb(app, loaded)
+        total = sum(shards_mb)
+        out: List[ShardStage] = []
+        t_cursor, global_left = now_ms, charge_mb
+        for d, mb in enumerate(shards_mb):
+            frac = mb / total if total else 0.0
+            ms = variant.load_ms * frac
+            gmb = (global_left if d == self.n_devices - 1
+                   else charge_mb * frac)
+            global_left -= gmb
+            out.append(ShardStage(
+                device=d, mb=mb,
+                claim_mb=max(0.0, mb - cur_mb[d]),
+                global_mb=gmb, load_ms=ms,
+                t_start_ms=t_cursor, ready_ms=t_cursor + ms))
+            t_cursor += ms
+        return out
+
+    def _dispatch(self, app: str, variant: ModelVariant,
+                  shards: List[ShardStage],
+                  ld_box: dict) -> Future:
+        """Queue the per-device stream ops and the gated whole-variant
+        commit move (same single staging channel as every other device
+        mutation, so commits land in accounting order)."""
+        for sh in shards:
+            sh.future = self._device_pools[sh.device].submit(
+                self._stage_shard_fn, app, variant, sh.device,
+                self.n_devices)
+
+        def commit_move():
+            for sh in shards:
+                try:
+                    if sh.future is not None:
+                        sh.future.result()
+                except CancelledError:
+                    pass
+            if not ld_box["ld"].cancelled:
+                self._stage_fn(app, variant)
+
+        return self._pool.submit(commit_move)
+
+    def _start_load(self, app: str, variant: ModelVariant, now_ms: float,
+                    charge: float, shards: List[ShardStage], *,
+                    demand: bool,
+                    predicted_ms: float) -> ShardedInflightLoad:
+        """Reserve the whole load's claims (global + per-device) and
+        dispatch its shard stages; the caller has already fit-checked
+        the claims."""
+        state = self.manager.state
+        state.reserve_inflight(app, charge)
+        if state.devices is not None:
+            state.devices.reserve_inflight(
+                app, tuple(sh.claim_mb for sh in shards))
+        box: dict = {}
+        ld = ShardedInflightLoad(
+            app=app, variant=variant, t_enqueue_ms=now_ms,
+            ready_ms=shards[-1].ready_ms if shards else now_ms,
+            charge_mb=charge, demand=demand, predicted_ms=predicted_ms,
+            future=None, shards=shards)
+        box["ld"] = ld
+        ld.future = self._dispatch(app, variant, shards, box)
+        self.inflight[app] = ld
+        return ld
+
+    # -- load lifecycle --------------------------------------------------
+    def enqueue(self, plan: ProcurePlan, now_ms: float, *,
+                demand: bool = False,
+                predicted_ms: float = INF
+                ) -> Optional[ShardedInflightLoad]:
+        """Start a sharded background load.  Same contract as the base
+        class, plus the per-device fit check: one shard over its chip's
+        budget fails the whole load before any claim lands."""
+        if plan is None or plan.variant is None:
+            return None
+        app, variant = plan.app, plan.variant
+        if app in self.inflight:
+            return None
+        state = self.manager.state
+        t = state.tenants[app]
+        if t.loaded is not None and variant.size_mb <= t.loaded.size_mb:
+            return None  # downgrades are admission-time decisions
+        for ev in plan.evictions:
+            state.load(ev.app, ev.new)
+            self.stage(ev.app, ev.new)
+        charge = variant.size_mb - (t.loaded.size_mb if t.loaded else 0.0)
+        if state.free_mb < charge - 1e-9:
+            return None  # plan went stale between planning and enqueue
+        shards = self._build_shards(app, variant, now_ms, charge)
+        ledger = state.devices
+        if ledger is not None and not ledger.fits(
+                tuple(sh.claim_mb for sh in shards)):
+            return None  # a shard doesn't fit its chip: whole load fails
+        ld = self._start_load(app, variant, now_ms, charge, shards,
+                              demand=demand, predicted_ms=predicted_ms)
+        if demand:
+            self.demand_loads += 1
+        self._emit(now_ms, "demand" if demand else "prefetch", app, charge)
+        return ld
+
+    def earliest_ready(self) -> float:
+        """The next *commit* (last shard of the soonest-completing load)
+        — deliberately the same wake semantics as the single-stream
+        loader: nothing is actionable at an intermediate shard landing,
+        and waking the engine there would shift prefetch enqueue times
+        off the single-stream schedule (the A/B must differ only in the
+        staging accounting).  Shard landings themselves are timestamped
+        from the virtual schedule, so reaping them lazily at the next
+        natural wake is exact."""
+        return min((ld.ready_ms for ld in self.inflight.values()),
+                   default=INF)
+
+    def reap(self, now_ms: float) -> List[LoadRecord]:
+        """Land every shard whose virtual slot has passed; commit loads
+        whose last shard landed.  Also drains the partial records of
+        cancelled loads so the engine credits their landed shards'
+        overlap."""
+        out: List[LoadRecord] = self._partials
+        self._partials = []
+        state = self.manager.state
+        ledger = state.devices
+        for app in list(self.inflight):
+            ld = self.inflight[app]
+            for sh in ld.shards:
+                if not sh.landed and sh.ready_ms <= now_ms:
+                    sh.landed = True
+                    self.shards_landed += 1
+            if not all(sh.landed for sh in ld.shards):
+                continue
+            del self.inflight[app]
+            ld.future.result()  # wall-clock commit move absorbed here
+            for sh in ld.shards:  # claims convert to committed weights
+                state.release_inflight(app, sh.global_mb)
+                if ledger is not None:
+                    ledger.release_inflight_shard(app, sh.device,
+                                                  sh.claim_mb)
+            state.load(app, ld.variant)
+            rec = LoadRecord(
+                app=app, bits=ld.variant.bits,
+                load_ms=ld.variant.load_ms,
+                t_enqueue_ms=ld.t_enqueue_ms, t_ready_ms=ld.ready_ms,
+                demand=ld.demand,
+                shard_intervals=tuple(
+                    (sh.t_start_ms, sh.ready_ms, sh.load_ms)
+                    for sh in ld.shards))
+            self._committed[app] = rec
+            self.history.append(rec)
+            self.loads_committed += 1
+            self._emit(ld.ready_ms, "load", app, ld.variant.size_mb)
+            out.append(rec)
+        return out
+
+    def _release_load(self, ld: ShardedInflightLoad) -> None:
+        """Release a load's claims shard-by-shard (device order) and
+        restore any device whose stream op already ran."""
+        state = self.manager.state
+        ledger = state.devices
+        loaded = state.tenants[ld.app].loaded
+        ld.cancelled = True
+        for sh in ld.shards:
+            state.release_inflight(ld.app, sh.global_mb)
+            if ledger is not None:
+                ledger.release_inflight_shard(ld.app, sh.device,
+                                              sh.claim_mb)
+            if sh.future is not None and not sh.future.cancel():
+                self._device_pools[sh.device].submit(
+                    self._stage_shard_fn, ld.app, loaded, sh.device,
+                    self.n_devices)
+        if not ld.future.cancel():
+            # The commit move may already be past its gate: queue a
+            # whole-variant restore behind it on the staging channel.
+            self.stage(ld.app, loaded)
+
+    def _retire_load(self, ld: ShardedInflightLoad) -> None:
+        """Release an abandoned load shard-by-shard and queue the honest
+        credit: its landed shards' transfer really was hidden, so a
+        partial record goes to the engine's next reap for overlap
+        measurement."""
+        self._release_load(ld)
+        landed = [sh for sh in ld.shards if sh.landed]
+        if landed:
+            self._partials.append(LoadRecord(
+                app=ld.app, bits=ld.variant.bits,
+                load_ms=sum(sh.load_ms for sh in landed),
+                t_enqueue_ms=ld.t_enqueue_ms,
+                t_ready_ms=max(sh.ready_ms for sh in landed),
+                demand=ld.demand,
+                shard_intervals=tuple(
+                    (sh.t_start_ms, sh.ready_ms, sh.load_ms)
+                    for sh in landed),
+                partial=True))
+
+    def cancel(self, app: str,
+               now_ms: float) -> Optional[ShardedInflightLoad]:
+        """Release the claim shard-by-shard and restore the device; the
+        landed shards' transfer still counts toward ``load_overlap_ms``
+        (queued for the engine's next reap)."""
+        ld = self.inflight.pop(app, None)
+        if ld is None:
+            return None
+        self._retire_load(ld)
+        self.prefetch_wasted += 1
+        self._emit(now_ms, "cancel", app, -ld.charge_mb)
+        return ld
+
+    def shrink_inflight(self, app: str, variant: Optional[ModelVariant],
+                        now_ms: float
+                        ) -> Optional[ShardedInflightLoad]:
+        """Sharded shrink: release the old shard claims (crediting landed
+        shards' overlap), then restage the smaller variant's shards from
+        ``now`` under the same in-flight entry."""
+        ld = self.inflight.get(app)
+        if ld is None or ld.demand or variant is None:
+            return None
+        if variant.size_mb >= ld.variant.size_mb:
+            return None
+        state = self.manager.state
+        loaded = state.tenants[app].loaded
+        new_charge = variant.size_mb - (loaded.size_mb if loaded else 0.0)
+        if new_charge <= 0.0:
+            return None  # below residency: that is a cancel, not a shrink
+        del self.inflight[app]
+        self._retire_load(ld)
+        # The shrunk claims always fit: strictly less was just released
+        # from the same devices, so no ledger fit check is needed here.
+        shards = self._build_shards(app, variant, now_ms, new_charge)
+        new_ld = self._start_load(app, variant, now_ms, new_charge,
+                                  shards, demand=ld.demand,
+                                  predicted_ms=ld.predicted_ms)
+        self.prefetch_shrunk += 1
+        self._emit(now_ms, "shrink", app, -(ld.charge_mb - new_charge))
+        return new_ld
+
+    def stage_shards_sync(self, app: str,
+                          variant: Optional[ModelVariant]) -> None:
+        """Run one whole variant's per-device stream ops concurrently and
+        wait them out — the wall-clock shape of a sharded admission-path
+        load (and what ``benchmarks.perf_compare`` measures against
+        single-stream staging)."""
+        futs = [self._device_pools[d].submit(
+                    self._stage_shard_fn, app, variant, d, self.n_devices)
+                for d in range(self.n_devices)]
+        for f in futs:
+            f.result()
+
+    def close(self) -> None:
+        super().close()
+        for pool in self._device_pools:
+            pool.shutdown(wait=True)

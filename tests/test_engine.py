@@ -104,6 +104,38 @@ def test_kv_sized_from_real_cache_pytree(cfgs):
     assert kv_cache_mb(cfg, 2, 10) == pytest.approx(nbytes / (1024 * 1024))
 
 
+def test_event_invariant_covers_devices_with_sharded_loads(cfgs):
+    """On a sharded mesh every audit event snapshots per-device weights
+    + shard claims, and ``check_event_invariant`` holds them to the
+    per-chip budgets while sharded loads are in flight."""
+    from repro.serving.api import SimTenant
+
+    srv = EdgeServer(budget_mb=0.0, policy="iws-bfe", delta_ms=1000.0,
+                     max_batch=4, sharded_mesh=(4,))
+    for name in TENANTS:
+        srv.register_tenant(name, SimTenant(name, cfgs[name]))
+    srv.budget_mb = srv.contention_budget(0.05)
+    srv.start()
+    trace, _ = poisson_trace(cfgs, requests_per_app=15,
+                             mean_iat_ms=300.0, seed=3)
+    stats = srv.engine.run_trace(trace)
+    assert stats["requests"] == len(trace)
+    assert stats["shards_landed"] > 0, "the mesh path actually staged"
+    srv.engine.check_event_invariant()
+    loads = [e for e in srv.engine.events
+             if e.kind in ("prefetch", "demand")]
+    assert loads and all(e.device_mb is not None for e in loads)
+    assert any(max(e.device_mb) > 0 for e in loads), \
+        "claims visible per device while loads are in flight"
+    # A tampered snapshot must trip the per-device check.
+    bad = srv.engine.events[-1]
+    bad.device_mb = tuple(b + 1.0
+                          for b in srv.manager.state.devices.budgets_mb)
+    with pytest.raises(AssertionError, match="device"):
+        srv.engine.check_event_invariant()
+    srv.close()
+
+
 def test_event_log_and_invariant_under_contention(cfgs):
     srv = make_server(max_batch=4)
     srv.budget_mb = srv.contention_budget(0.1)

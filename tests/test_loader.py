@@ -206,9 +206,9 @@ def test_demand_load_admits_cold_not_warm():
     srv.close()
 
 
-def test_speculation_yields_to_demand():
-    """A speculative prefetch's in-flight claim must never starve a real
-    queued request: the engine cancels it and funds the demand load."""
+def _speculation_fixture(pending_mb):
+    """a's 500MB prefetch in flight on an 800MB budget; b has a queued
+    request whose demand load is unfundable until speculation yields."""
     mgr = make_manager(budget_mb=800.0)
     srv = make_server()  # engine/batcher shell; manager swapped below
     srv.start()
@@ -217,11 +217,9 @@ def test_speculation_yields_to_demand():
     srv.loader.close()  # replace the real loader with the synthetic one
     srv.manager = mgr
     srv.engine.loader = srv.loader = loader
-    # a's prefetch claims 500 of 800; b's smallest (200) no longer fits
-    # beside it once b's cache need arrives.
     loader.enqueue(mgr.plan_proactive("a", 0.0), 0.0, predicted_ms=600.0)
     assert mgr.state.free_mb == pytest.approx(300.0)
-    mgr.state.pending_mb += 250.0  # leave < b.smallest free
+    mgr.state.pending_mb += pending_mb  # leave < b.smallest free
     assert mgr.plan_demand("b", 0.0) is None
 
     class FakeTenant:
@@ -230,13 +228,83 @@ def test_speculation_yields_to_demand():
     srv.engine.batcher.submit(
         Request(app="b", prompt=np.arange(4, dtype=np.int32),
                 max_new=2, arrival_ms=0.0))
+    return mgr, srv, loader
+
+
+def test_speculation_shrinks_before_cancelling_for_demand():
+    """A speculative prefetch's in-flight claim must never starve a real
+    queued request — but yielding is graduated: the guess is first
+    *shrunk* to its smallest variant (keeping a degraded warm start)
+    and only cancelled outright when that still cannot fund demand."""
+    mgr, srv, loader = _speculation_fixture(pending_mb=250.0)
     srv.engine._stage_demand_loads(0.0)
-    assert "a" not in loader.inflight, "speculative claim cancelled"
+    # Shrinking a 500 -> 300 freed 200MB: b's 200MB smallest now fits.
+    ld = loader.inflight.get("a")
+    assert ld is not None, "shrunk, not cancelled"
+    assert ld.variant.size_mb == 300.0
+    assert ld.charge_mb == 300.0
+    assert loader.prefetch_shrunk == 1
+    assert loader.prefetch_wasted == 0
     assert "b" in loader.inflight, "demand load funded"
-    assert loader.prefetch_wasted == 1
+    assert loader.inflight["b"].demand
     mgr.state.pending_mb -= 250.0
     loader.close()
     srv.close()
+
+
+def test_speculation_cancelled_when_shrink_is_not_enough():
+    """When even the shrunk claim starves the demand load, the guess is
+    cancelled outright (shrink first, then cancel)."""
+    # pending 450: free after shrink = 800 - 300 - 450 = 50 < 200, so
+    # only a full cancel (free 350) funds b's smallest.
+    mgr, srv, loader = _speculation_fixture(pending_mb=450.0)
+    srv.engine._stage_demand_loads(0.0)
+    assert "a" not in loader.inflight, "speculative claim cancelled"
+    assert "b" in loader.inflight, "demand load funded"
+    assert loader.prefetch_shrunk == 1, "shrink was tried first"
+    assert loader.prefetch_wasted == 1
+    mgr.state.pending_mb -= 450.0
+    loader.close()
+    srv.close()
+
+
+def test_shrink_inflight_lifecycle():
+    """shrink_inflight releases the claim difference, restages the
+    smaller transfer, and the shrunk load commits/cancels normally."""
+    mgr = make_manager()
+    loader = BackgroundLoader(mgr)
+    ld = loader.enqueue(mgr.plan_proactive("a", 0.0), now_ms=0.0,
+                        predicted_ms=2000.0)
+    assert ld.charge_mb == 500.0
+    small = mgr.state.tenants["a"].zoo.smallest  # 300MB
+    out = loader.shrink_inflight("a", small, now_ms=100.0)
+    assert out is ld
+    assert ld.variant is small and ld.charge_mb == 300.0
+    assert ld.t_enqueue_ms == 100.0, \
+        "overlap window restarts with the smaller transfer"
+    assert ld.ready_ms == pytest.approx(100.0 + small.load_ms)
+    assert mgr.state.inflight_mb == pytest.approx(300.0)
+    assert mgr.state.free_mb == pytest.approx(700.0)
+    # Idempotence/guards: same-or-larger target and demand loads refuse.
+    assert loader.shrink_inflight("a", small, 150.0) is None
+    assert loader.shrink_inflight("a", None, 150.0) is None
+    recs = loader.reap(ld.ready_ms)
+    assert [r.bits for r in recs] == [small.bits]
+    assert mgr.state.tenants["a"].loaded is small
+    assert mgr.state.inflight_mb == 0.0
+    assert loader.prefetch_shrunk == 1
+    loader.close()
+
+
+def test_shrink_inflight_refuses_demand_loads():
+    mgr = make_manager()
+    loader = BackgroundLoader(mgr)
+    loader.enqueue(mgr.plan_demand("a", 0.0), 0.0, demand=True)
+    small = mgr.state.tenants["a"].zoo.smallest
+    assert loader.shrink_inflight("a", small, 10.0) is None, \
+        "a demand load's variant was planned against a waiting batch"
+    assert loader.prefetch_shrunk == 0
+    loader.close()
 
 
 def test_event_invariant_holds_with_loads_in_flight():
