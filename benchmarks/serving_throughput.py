@@ -43,6 +43,16 @@ the *same* trace:
   single-stream loader's on the same trace (landed shards of cancelled
   loads are credited honestly; the single-stream loader credits a
   cancelled load nothing).
+* **migration** — the sharded engine on a *device-skewed* mesh (chip 0
+  deliberately tight, neighbors roomy), with cross-device victim
+  migration on vs off.  With migration off, the tight chip fails every
+  speculative staged load whole (the PR-4 clean-failure path) and the
+  engine degrades to demand-time loading; with migration on, the
+  ``MigrateShard`` planner moves a resident victim's shards to the free
+  chips and the same loads land.  ``serving/migration/warm_ratio`` is
+  the A/B row — its detail carries the downgrade-only run's warm ratio,
+  ``shards_migrated``, and both runs' prefetch-hit counts, showing
+  migration admits loads the downgrade-only path shrank or failed.
 
 Reports requests/sec and per-tenant p50/p95/p99 for the prefetch engine,
 plus the head-to-head ``serving/warm_ratio`` and the measured
@@ -78,7 +88,8 @@ def _warm_compile(srv: EdgeServer, batch_sizes=(1, 2, 3, 4)) -> None:
 
 
 def _run_engine(prefetch: bool, policy: str = "bfe",
-                sharded: bool = False):
+                sharded: bool = False, device_budget_mb=None,
+                migrate: bool = True):
     """One full engine run over the default Poisson trace."""
     srv = EdgeServer.build(ServingConfig(
         tenants=tuple(TenantSpec(n) for n in TENANTS),
@@ -86,7 +97,9 @@ def _run_engine(prefetch: bool, policy: str = "bfe",
         delta_ms=750.0,
         batching=BatchingSpec(max_batch=4, window_ms=50.0),
         loader=LoaderSpec(prefetch=prefetch, sharded=sharded,
-                          mesh_shape=(8,)),
+                          mesh_shape=(8,),
+                          device_budget_mb=device_budget_mb,
+                          migrate=migrate),
         # Contended: all-bf16 residency impossible, so BFE keeps
         # evicting; headroom sized to the largest admitted decode cache.
         kv_headroom_shape=(2, PROMPT_LEN + MAX_NEW)))
@@ -104,11 +117,34 @@ def _run_engine(prefetch: bool, policy: str = "bfe",
     return srv, stats, wall_s
 
 
+def _skewed_budgets(srv: EdgeServer, n: int = 8, tight: float = 0.7,
+                    roomy: float = 3.0):
+    """Per-chip budgets for the migration A/B: chip 0 holds every
+    tenant's int8 shard plus only ``tight`` of the headroom a full-bf16
+    residency needs (so bf16 staged loads block there), the other chips
+    stay roomy enough to absorb a migrated victim shard."""
+    from repro.distributed import sharding as SH
+
+    mesh = SH.serving_mesh((n,))
+    shard8 = shard16 = 0.0
+    for tr in srv.tenants.values():
+        frac = SH.weight_shard_fraction(tr.cfg, mesh)
+        shard8 += tr.zoo.by_bits(8).size_mb * frac
+        shard16 += tr.zoo.by_bits(16).size_mb * frac
+    tight_mb = shard8 + tight * (shard16 - shard8)
+    return (tight_mb,) + (roomy * shard16,) * (n - 1)
+
+
 def run() -> None:
     srv, stats, wall_s = _run_engine(prefetch=True)
     _, reactive, _ = _run_engine(prefetch=False)
     _, batch_aware, _ = _run_engine(prefetch=True, policy="batch-bfe")
     sharded_srv, sharded, _ = _run_engine(prefetch=True, sharded=True)
+    skew = _skewed_budgets(srv)
+    mig_srv, mig, _ = _run_engine(prefetch=True, sharded=True,
+                                  device_budget_mb=skew, migrate=True)
+    _, mig_off, _ = _run_engine(prefetch=True, sharded=True,
+                                device_budget_mb=skew, migrate=False)
 
     emit("serving/requests_per_sec", stats.get("requests_per_sec", 0.0),
          f"n={stats['requests']} wall={wall_s:.1f}s "
@@ -148,6 +184,20 @@ def run() -> None:
          f"prefetch_wasted={sharded['prefetch_wasted']} "
          f"per_shard_credit="
          f"{sharded['load_overlap_ms'] - stats['load_overlap_ms']:.6g}")
+    # The migration A/B: same trace, same sharded channel, chip 0
+    # deliberately tight.  Downgrade-only (migrate off) fails every
+    # speculative load the tight chip blocks; MigrateShard funds them.
+    # The win is the admitted loads: prefetch hits recovered, warm ratio
+    # at least on par, victims' shards rebalanced instead of loads lost.
+    mig_led = mig_srv.manager.state.devices
+    emit("serving/migration/warm_ratio", mig["warm_ratio"],
+         f"downgrade_only={mig_off['warm_ratio']:.3f} "
+         f"shards_migrated={mig['shards_migrated']} "
+         f"prefetch_hits={mig['prefetch_hits']} "
+         f"off_prefetch_hits={mig_off['prefetch_hits']} "
+         f"demand_loads={mig['demand_loads']} "
+         f"off_demand_loads={mig_off['demand_loads']} "
+         f"tight_chip={mig_led.budgets_mb[0]:.2f}MB")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

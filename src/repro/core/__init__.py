@@ -5,6 +5,11 @@ eviction policies (LFE / BFE / WS-BFE / iWS-BFE) → manager (predictors +
 memory optimizer + loader) → E2C-style simulator for the paper's
 evaluation protocol.
 """
+from repro.core.actions import (CancelPrefetch, ChargeKV, Downgrade,
+                                EvictKV, Load, MigrateShard, PlanError,
+                                ResidencyPlan, Shrink, Unload, Eviction,
+                                eviction_actions, plan_migration, plan_of,
+                                procure_actions, staged_load_action)
 from repro.core.manager import (BatchAdmission, EdgeMultiAI,
                                 InferenceRecord, Metrics)
 from repro.core.memory_state import MemoryState, TenantState
@@ -21,6 +26,10 @@ from repro.core.simulator import (SimResult, Workload, generate_workload,
 __all__ = [
     "BatchAdmission", "EdgeMultiAI", "InferenceRecord", "Metrics",
     "MemoryState", "TenantState", "ModelVariant", "ModelZoo",
+    "Load", "Unload", "Downgrade", "Shrink", "CancelPrefetch",
+    "ChargeKV", "EvictKV", "MigrateShard", "ResidencyPlan", "PlanError",
+    "Eviction", "plan_of", "plan_migration", "procure_actions",
+    "eviction_actions", "staged_load_action",
     "zoo_from_config", "POLICIES", "ProcurePlan", "kv_headroom_plan",
     "Policy", "BatchAware", "DemandContext", "DesperationFallback",
     "FallbackPolicy", "available_policies", "register_policy",

@@ -1,8 +1,14 @@
 """The NN Model Manager (§III-A): request/memory predictors + memory
 optimizer + model loader, orchestrating the eviction policies.
 
-``EdgeMultiAI`` is the framework object: it owns the MemoryState, enacts
-ProcurePlans, and does the warm/cold accounting.  It is used two ways:
+``EdgeMultiAI`` is the framework object: it owns the MemoryState and does
+the warm/cold accounting.  Every residency decision it makes — admission
+procurement, KV headroom scavenging, self-downgrade, the desperation
+backstop, cross-device migration — is *built* as a
+:class:`~repro.core.actions.ResidencyPlan` and *enacted* through the one
+transactional applier, ``MemoryState.apply``; physical weight moves
+mirror the applied actions through the ``loader`` callback.  It is used
+two ways:
 
 * driven by the **simulator** (paper-faithful evaluation, Figs 4–10) with
   an externally generated predicted workload, and
@@ -13,9 +19,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
-from repro.core.memory_state import MemoryState, TenantState
+from repro.core import actions as A
+from repro.core.memory_state import INF, MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.core.policies import (DemandContext, FallbackPolicy, Policy,
                                  PolicyLike, ProcurePlan, resolve_fallback,
@@ -56,6 +63,10 @@ class InferenceRecord:
 class EdgeMultiAI:
     """Framework facade: policy-driven multi-tenant model management."""
 
+    #: EWMA weight for the arrival-residual estimate behind the adaptive
+    #: prediction window (satellite of the plan-IR PR).
+    RESID_ALPHA = 0.3
+
     def __init__(
         self,
         zoos: Dict[str, ModelZoo],
@@ -65,6 +76,8 @@ class EdgeMultiAI:
         history_ms: float = 3000.0,
         loader: Optional[Callable[[str, Optional[ModelVariant]], None]] = None,
         fallback: "FallbackPolicy | str | None" = "desperation",
+        adaptive_delta: bool = False,
+        migrate: bool = True,
     ):
         self.state = MemoryState(
             budget_mb=budget_mb,
@@ -82,26 +95,80 @@ class EdgeMultiAI:
             None if self.policy is None else resolve_fallback(fallback))
         self.delta = delta_ms
         self.history = history_ms
+        # Adaptive prediction window: per-tenant Δ from the EWMA of
+        # measured arrival residuals |t_actual − t_pred| (off by default
+        # — the paper's fixed Δ).  ``delta_for`` is the single read path.
+        self.adaptive_delta = adaptive_delta
+        self._residuals: Dict[str, float] = {}
+        # Cross-device victim migration: when a chip's budget blocks an
+        # admission load while neighbors idle, move a resident victim's
+        # shards instead of downgrading/failing (sharded mesh only).
+        self.migrate = migrate
         self.records: List[InferenceRecord] = []
         self.kv_rejections = 0  # batches rejected for KV pressure
         self._loader = loader  # real weight mover (serving runtime)
+        # Admission-path migration observer (t_ms, app, mb): the serving
+        # runtime wires this to the loader's event hook so MigrateShard
+        # moves show up in the engine's audit trail like loader-path
+        # migrations do.
+        self.on_migrate: Optional[Callable[[float, str, float],
+                                           None]] = None
 
     # ------------------------------------------------------------------
+    def _apply_actions(self, actions: Iterable[A.Action],
+                       now: Optional[float] = None) -> None:
+        """Enact residency actions: one transactional ``state.apply``,
+        then mirror each action to the physical loader in the same order
+        the accounting committed them (a migrated victim is restaged so
+        device contents track the ledger; a same-variant restage is a
+        no-op for the runtime)."""
+        actions = tuple(actions)
+        if not actions:
+            return
+        self.state.apply(A.ResidencyPlan(actions))
+        for act in actions:
+            if isinstance(act, A.RESIDENCY_ACTIONS):
+                if self._loader:
+                    self._loader(act.app, act.variant)
+            elif isinstance(act, A.MigrateShard):
+                if self._loader:
+                    self._loader(act.app,
+                                 self.state.tenants[act.app].loaded)
+                if self.on_migrate is not None and now is not None:
+                    self.on_migrate(now, act.app, act.mb)
+
     def _enact(self, plan: ProcurePlan) -> None:
-        for ev in plan.evictions:
-            self.state.load(ev.app, ev.new)
-            if self._loader:
-                self._loader(ev.app, ev.new)
-        self.state.load(plan.app, plan.variant)
-        if self._loader:
-            self._loader(plan.app, plan.variant)
+        self._apply_actions(A.procure_actions(plan))
 
     def _procure(self, app: str, now: float) -> ProcurePlan:
         return self.policy.plan_procure(self.state, app, now,
-                                        delta=self.delta,
+                                        delta=self.delta_for(app),
                                         history=self.history)
 
     # ------------------------------------------------------------------
+    def delta_for(self, app: str) -> float:
+        """The prediction-window half-width Δ for one tenant: the
+        configured constant, or — with ``adaptive_delta`` — twice the
+        EWMA of the tenant's measured arrival residuals, clamped to
+        [Δ/4, 2Δ] so a lucky streak cannot collapse the window to zero
+        nor a noisy tenant inflate it without bound."""
+        if not self.adaptive_delta:
+            return self.delta
+        r = self._residuals.get(app)
+        if r is None:
+            return self.delta
+        return min(max(2.0 * r, 0.25 * self.delta), 2.0 * self.delta)
+
+    def _observe_residual(self, app: str, now: float) -> None:
+        t = self.state.tenants[app]
+        if t.predicted_next is INF or math.isinf(t.predicted_next):
+            return
+        resid = abs(now - t.predicted_next)
+        prev = self._residuals.get(app)
+        self._residuals[app] = (
+            resid if prev is None
+            else self.RESID_ALPHA * resid + (1 - self.RESID_ALPHA) * prev)
+
     def set_prediction(self, app: str, t_pred: float) -> None:
         self.state.tenants[app].predicted_next = t_pred
 
@@ -133,7 +200,7 @@ class EdgeMultiAI:
         if self.policy is None:
             return None
         return self.policy.plan_prefetch(self.state, app, now,
-                                         delta=self.delta,
+                                         delta=self.delta_for(app),
                                          history=self.history)
 
     def plan_demand(self, app: str, now: float, kv_mb: float = 0.0,
@@ -160,39 +227,38 @@ class EdgeMultiAI:
             demand = DemandContext(kv_head_mb=kv_mb, kv_full_mb=kv_mb,
                                    queue_depth=1, max_batch=1)
         plan = self.policy.plan_demand(self.state, app, now, demand,
-                                       delta=self.delta,
+                                       delta=self.delta_for(app),
                                        history=self.history)
         if plan is None and self.fallback is not None:
             # Serving never fails what the fallback can fund: free the
             # smallest variant's footprint ignoring window/history
             # protections, then load exactly that — a maximalist
             # re-procure here would snowball the evictions it just
-            # forced into an even bigger claim.  (The fallback is
-            # enacted, not planned: the policies are pure over the
-            # *current* state.)
-            charge = self.policy.demand_charge(demand)
-            self.state.pending_mb += charge
-            try:
+            # forced into an even bigger claim.  (The fallback's
+            # evictions are enacted here as one atomic plan: the pure
+            # policies stay pure over the *current* state.)
+            with self.state.pending(self.policy.demand_charge(demand)):
                 self._desperate_evict(app, t.zoo.smallest.size_mb)
                 if self.state.free_mb >= t.zoo.smallest.size_mb:
                     plan = ProcurePlan(app, t.zoo.smallest)
-            finally:
-                self.state.pending_mb -= charge
         return plan if plan is not None and plan.ok else None
 
     def _desperate_evict(self, app: str, need_mb: float) -> None:
-        """Enact the fallback policy's evictions for ``app``'s need."""
+        """Enact the fallback policy's evictions for ``app``'s need —
+        built as one plan, applied all-or-nothing."""
         if self.fallback is None:
             return
-        for ev in self.fallback.plan(self.state, app, need_mb):
-            self.state.load(ev.app, ev.new)
-            if self._loader:
-                self._loader(ev.app, ev.new)
+        self._apply_actions(A.eviction_actions(
+            self.fallback.plan(self.state, app, need_mb)))
 
     def on_request(self, app: str, now: float) -> InferenceRecord:
         t = self.state.tenants[app]
-        expected = self.state.in_window(app, now, self.delta,
+        expected = self.state.in_window(app, now, self.delta_for(app),
                                         t.zoo.largest.load_ms)
+        # Close the predictor-quality loop *after* the window check: the
+        # adapted Δ a request sees comes from prior residuals, then this
+        # arrival's |t_actual − t_pred| feeds the EWMA for the next one.
+        self._observe_residual(app, now)
         t.requests += 1
         if not expected:
             t.unexpected += 1
@@ -216,9 +282,7 @@ class EdgeMultiAI:
             # No framework: on-demand FP32 load, no eviction authority.
             big = t.zoo.largest
             if self.state.free_mb >= big.size_mb:
-                self.state.load(app, big)
-                if self._loader:  # stage real weights too (serving)
-                    self._loader(app, big)
+                self._apply_actions((A.Load(app, big),))
                 variant, warm, failed = big, False, False
                 latency = big.load_ms + big.load_ms / LOAD_OVER_INFER
             else:
@@ -266,8 +330,7 @@ class EdgeMultiAI:
         recorded as a cold start (latency includes the load) even though
         ``loaded`` is non-None by admission time."""
         t = self.state.tenants[app]
-        self.state.pending_mb += kv_mb
-        try:
+        with self.state.pending(kv_mb):
             rec = self.on_request(app, now)
             if rec.failed and self.policy is not None:
                 # The pure policies refuse to unload (iWS-BFE only ever
@@ -286,8 +349,6 @@ class EdgeMultiAI:
                     rec.accuracy = small.accuracy
                     rec.latency_ms = (small.load_ms
                                       * (1.0 + 1.0 / LOAD_OVER_INFER))
-        finally:
-            self.state.pending_mb -= kv_mb
         if rec.failed:
             # Attribute the failure: if weights alone would have been
             # procurable without the staged KV need, this is cache
@@ -301,41 +362,63 @@ class EdgeMultiAI:
             return BatchAdmission(app, now, 0.0, rec.warm, True, None,
                                   kv_rejected=kv_rej)
         if self.state.free_mb < kv_mb and self.policy is not None:
-            for ev in self.policy.plan_headroom(self.state, app, now, kv_mb,
-                                                delta=self.delta,
-                                                history=self.history):
-                self.state.load(ev.app, ev.new)
-                if self._loader:
-                    self._loader(ev.app, ev.new)
+            self._apply_actions(A.eviction_actions(
+                self.policy.plan_headroom(self.state, app, now, kv_mb,
+                                          delta=self.delta_for(app),
+                                          history=self.history)))
         self_downgraded = False
-        while (self.policy is not None and self.state.free_mb < kv_mb
-               and (nxt := t.zoo.next_smaller(t.loaded)) is not None):
-            self.state.load(app, nxt)
-            if self._loader:
-                self._loader(app, nxt)
-            self_downgraded = True
-        # Sharded mesh: a synchronous admission load is planned against
-        # the *global* budget (policies are device-blind), so the chosen
-        # variant's shard may overshoot one chip — downgrade until every
-        # shard fits its device, the same resolution an unfundable
-        # sharded background load feeds into.
-        while (self.policy is not None and self.state.devices is not None
-               and t.loaded is not None
-               and not self.state.devices.fits_variant(app, t.loaded)
-               and (nxt := t.zoo.next_smaller(t.loaded)) is not None):
-            self.state.load(app, nxt)
-            if self._loader:
-                self._loader(app, nxt)
-            self_downgraded = True
+        if self.policy is not None and t.loaded is not None \
+                and self.state.free_mb < kv_mb:
+            # Self-downgrade, planned: walk the zoo down until the freed
+            # weight difference funds the cache, then apply one
+            # Downgrade to the final variant (identical resolution to
+            # the old step-by-step loop, one transaction and one
+            # physical restage instead of N).
+            v, freed = t.loaded, 0.0
+            while (self.state.free_mb + freed < kv_mb
+                   and (nxt := t.zoo.next_smaller(v)) is not None):
+                freed += v.size_mb - nxt.size_mb
+                v = nxt
+            if v is not t.loaded:
+                self._apply_actions((A.Downgrade(app, v),))
+                self_downgraded = True
+        if (self.policy is not None and self.state.devices is not None
+                and t.loaded is not None and self.migrate
+                and not self.state.devices.fits_variant(app, t.loaded)):
+            # Cross-device victim migration: the admission load was
+            # planned against the *global* budget (policies are
+            # device-blind) and one chip overflowed while neighbors
+            # idle.  Before downgrading the whole load, try moving
+            # resident victims' shards to the free chips — simulate
+            # first, then commit the moves as one atomic plan.
+            moves = A.plan_migration(
+                self.state, app,
+                (0.0,) * self.state.devices.n_devices)
+            if moves is not None and \
+                    self.state.simulate(A.ResidencyPlan(moves)) is None:
+                self._apply_actions(moves, now=now)
+        if (self.policy is not None and self.state.devices is not None
+                and t.loaded is not None
+                and not self.state.devices.fits_variant(app, t.loaded)):
+            # Sharded mesh fallback: no migration could relieve the
+            # chip, so downgrade until every shard fits its device —
+            # the same resolution an unfundable sharded background load
+            # feeds into.  Planned as one Downgrade to the first
+            # fitting variant.
+            v = t.loaded
+            while (v is not None
+                   and not self.state.devices.fits_variant(app, v)):
+                v = t.zoo.next_smaller(v)
+            if v is not None and v is not t.loaded:
+                self._apply_actions((A.Downgrade(app, v),))
+                self_downgraded = True
         if (self.state.devices is not None and t.loaded is not None
                 and not self.state.devices.fits_variant(app, t.loaded)):
             # Even the smallest shard overflows its chip: reject rather
             # than commit over-budget per-device state (the global-path
             # analogue is an unprocurable plan — a counted weight
             # failure, never an invariant violation later).
-            self.state.load(app, None)
-            if self._loader:
-                self._loader(app, None)
+            self._apply_actions((A.Unload(app),))
             rec.warm, rec.failed, rec.bits = False, True, None
             rec.accuracy, rec.latency_ms = 0.0, math.inf
             return BatchAdmission(app, now, 0.0, False, True, None,
@@ -366,13 +449,13 @@ class EdgeMultiAI:
             rec.warm = False
             rec.latency_ms = (final.load_ms
                               + final.load_ms / LOAD_OVER_INFER)
-        self.state.reserve_kv(app, kv_mb)
+        self._apply_actions((A.ChargeKV(app, kv_mb),))
         return BatchAdmission(app, now, kv_mb, rec.warm, False,
                               final.bits, self_downgraded)
 
     def release_kv(self, app: str, kv_mb: float) -> None:
         """A batch retired: return its cache memory to the pool."""
-        self.state.release_kv(app, kv_mb)
+        self._apply_actions((A.EvictKV(app, kv_mb),))
 
     # ------------------------------------------------------------------
     def metrics(self) -> "Metrics":

@@ -9,13 +9,23 @@ This is deliberately a plain-Python, side-effect-free data layer so the
 eviction policies are pure functions over it — which is what lets the
 hypothesis property tests drive millions of random schedules through the
 invariant "Σ loaded sizes ≤ budget, always".
+
+Mutations go through the residency-action IR: callers build a
+:class:`~repro.core.actions.ResidencyPlan` and hand it to
+:meth:`MemoryState.simulate` (validate without mutating) or
+:meth:`MemoryState.apply` (commit all-or-nothing).  The per-primitive
+methods (``load`` / ``reserve_kv`` / ``reserve_inflight`` / …) remain
+public for tests and as the applier's internals, but ``apply`` is the
+only entry point the framework itself uses.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core import actions as A
 from repro.core.model_zoo import ModelVariant, ModelZoo
 
 INF = math.inf
@@ -52,6 +62,8 @@ class DeviceLedger:
         self.weights: Dict[str, Tuple[float, ...]] = {}
         # In-flight claims per app per device (sharded loads mid-staging).
         self.inflight: Dict[str, List[float]] = {}
+        # Shards moved between chips by MigrateShard actions (stats).
+        self.shards_migrated = 0
 
     # -- queries ---------------------------------------------------------
     def split(self, app: str, variant: Optional[ModelVariant]
@@ -83,25 +95,58 @@ class DeviceLedger:
         return all(self.free_mb(d) >= claims[d] - 1e-9
                    for d in range(self.n_devices))
 
+    def held(self, app: str, variant: Optional[ModelVariant] = None
+             ) -> Tuple[float, ...]:
+        """Actual per-device holdings — the migrated layout when one
+        exists; falls back to ``variant``'s canonical split when the
+        ledger has not seen a load for ``app`` yet."""
+        cur = self.weights.get(app)
+        if cur is not None:
+            return tuple(cur)
+        return self.split(app, variant)
+
+    def projected(self, app: str, variant: Optional[ModelVariant]
+                  ) -> Tuple[float, ...]:
+        """Per-device holdings after swapping ``app``'s weights to
+        ``variant``: the *current* (possibly migrated) layout scaled to
+        the new total — a migrated victim keeps its layout, so the chip
+        it vacated stays vacated through downgrades and upgrades, and a
+        per-chip budget that held keeps holding.  Canonical split when
+        nothing is held (a cold load re-derives the canonical layout).
+        For never-migrated tenants the current layout *is* canonical,
+        so this is exactly the old re-derivation."""
+        if variant is None:
+            return (0.0,) * self.n_devices
+        canonical = self.split(app, variant)
+        cur = self.weights.get(app)
+        total = sum(cur) if cur else 0.0
+        if not cur or total <= 1e-12:
+            return canonical
+        scale = sum(canonical) / total
+        return tuple(w * scale for w in cur)
+
     def fits_variant(self, app: str, variant: Optional[ModelVariant]
                      ) -> bool:
         """Would swapping ``app``'s committed weights to ``variant`` keep
-        every device in budget (admission-path downgrade check)?"""
+        every device in budget (admission-path downgrade check)?  The
+        projection preserves a migrated layout, so the check validates
+        exactly what :meth:`on_load` will commit."""
         if variant is None:
             return True
         cur = self.weights.get(app, (0.0,) * self.n_devices)
-        new = self.split(app, variant)
+        new = self.projected(app, variant)
         return all(self.free_mb(d) + cur[d] >= new[d] - 1e-9
                    for d in range(self.n_devices))
 
     # -- mutations -------------------------------------------------------
     def on_load(self, app: str, variant: Optional[ModelVariant]) -> None:
         """``MemoryState.load`` observed a (re)load: re-derive the app's
-        committed shard footprint from whatever is now loaded."""
+        committed shard footprint — the current layout scaled to the new
+        variant (see :meth:`projected`), canonical from cold."""
         if variant is None:
             self.weights.pop(app, None)
         else:
-            self.weights[app] = self.split(app, variant)
+            self.weights[app] = self.projected(app, variant)
 
     def reserve_inflight(self, app: str, claims: Tuple[float, ...]) -> None:
         """Claim a whole sharded load's per-device footprint at enqueue
@@ -124,6 +169,25 @@ class DeviceLedger:
         cur[device] = max(0.0, cur[device] - mb)
         if all(c <= 1e-12 for c in cur):
             del self.inflight[app]
+
+    def move_shard(self, app: str, src: int, dst: int, mb: float) -> None:
+        """Enact one :class:`~repro.core.actions.MigrateShard`: move
+        ``mb`` of ``app``'s committed weights from ``src`` to ``dst``.
+        The destination must stay in budget — migration is planned, and
+        an unfundable move fails the whole plan, never lands partially."""
+        cur = list(self.weights.get(app, (0.0,) * self.n_devices))
+        if mb < 0 or cur[src] < mb - 1e-9:
+            raise A.PlanError(
+                f"{app} holds {cur[src]:.2f}MB on device {src}, "
+                f"cannot migrate {mb:.2f}MB")
+        if self.used_mb(dst) + mb > self.budgets_mb[dst] + 1e-6:
+            raise A.PlanError(
+                f"device {dst} cannot absorb {mb:.2f}MB of {app} "
+                f"({self.used_mb(dst):.2f}/{self.budgets_mb[dst]:.2f}MB)")
+        cur[src] -= mb
+        cur[dst] += mb
+        self.weights[app] = tuple(cur)
+        self.shards_migrated += 1
 
     def check_invariant(self) -> None:
         for d in range(self.n_devices):
@@ -269,3 +333,148 @@ class MemoryState:
         """Laplace-smoothed P(unexpected request | window) from history."""
         t = self.tenants[app]
         return (t.unexpected + 1.0) / (t.requests + 2.0)
+
+    # ------------------------------------------------------------------
+    # The transactional plan applier: the framework's only mutation path
+    # ------------------------------------------------------------------
+    @contextlib.contextmanager
+    def pending(self, mb: float):
+        """Scope a transient planning charge: procurement inside the
+        block plans around ``mb`` of reserved-but-uncommitted memory
+        (a KV need, typically), and the charge always comes back off."""
+        self.pending_mb += mb
+        try:
+            yield self
+        finally:
+            self.pending_mb -= mb
+
+    def _snapshot(self) -> Tuple[Any, ...]:
+        tenants = {a: (t.loaded, t.kv_mb, t.inflight_mb)
+                   for a, t in self.tenants.items()}
+        dev = None
+        if self.devices is not None:
+            dev = ({a: tuple(w) for a, w in self.devices.weights.items()},
+                   {a: list(c) for a, c in self.devices.inflight.items()},
+                   self.devices.shards_migrated)
+        return tenants, self.pending_mb, dev
+
+    def _restore(self, snap: Tuple[Any, ...]) -> None:
+        tenants, pending, dev = snap
+        for a, (loaded, kv, inflight) in tenants.items():
+            t = self.tenants[a]
+            t.loaded, t.kv_mb, t.inflight_mb = loaded, kv, inflight
+        self.pending_mb = pending
+        if dev is not None:
+            weights, inflight, migrated = dev
+            self.devices.weights = dict(weights)
+            self.devices.inflight = {a: list(c) for a, c in inflight.items()}
+            self.devices.shards_migrated = migrated
+
+    def simulate(self, plan: "A.ResidencyPlan") -> Optional[str]:
+        """Validate a plan without mutating: returns None when every
+        action is feasible in sequence (budget and per-device ledgers
+        included), else the first failure's reason.  ``simulate`` runs
+        the *same* per-action code as :meth:`apply` against a snapshot,
+        so a plan that simulates clean is guaranteed to apply."""
+        snap = self._snapshot()
+        try:
+            for act in plan:
+                self._apply_action(act)
+            return None
+        except A.PlanError as e:
+            return str(e)
+        finally:
+            self._restore(snap)
+
+    def apply(self, plan: "A.ResidencyPlan") -> "A.ResidencyPlan":
+        """Commit a plan all-or-nothing: actions apply in order, each
+        re-validated; the first infeasible action rolls back everything
+        already applied (claims released, weights restored) and raises
+        :class:`~repro.core.actions.PlanError`.  Returns the plan so
+        callers can chain into physical staging."""
+        snap = self._snapshot()
+        try:
+            for act in plan:
+                self._apply_action(act)
+        except A.PlanError:
+            self._restore(snap)
+            raise
+        return plan
+
+    def _apply_action(self, act: "A.Action") -> None:
+        if act.app not in self.tenants:
+            raise A.PlanError(f"unknown tenant {act.app!r}")
+        t = self.tenants[act.app]
+        if isinstance(act, A.Load):
+            if act.staged:
+                load = A.concretize_load(act, self)
+                if self.free_mb < load.claim_mb - 1e-9:
+                    raise A.PlanError(
+                        f"staged load {act.app} needs {load.claim_mb:.2f}MB"
+                        f" > {self.free_mb:.2f}MB free")
+                if load.shard_claims is not None and self.devices is not None:
+                    if not self.devices.fits(load.shard_claims):
+                        raise A.PlanError(
+                            f"staged load {act.app}: a shard does not fit "
+                            f"its chip {load.shard_claims}")
+                    self.devices.reserve_inflight(act.app, load.shard_claims)
+                t.inflight_mb += load.claim_mb
+            else:
+                # Commit: the claim converts to weights in one
+                # transaction (net zero on free_mb for staged loads).
+                if act.claim_mb:
+                    t.inflight_mb = max(0.0, t.inflight_mb - act.claim_mb)
+                if act.shard_claims is not None and self.devices is not None:
+                    for d, mb in enumerate(act.shard_claims):
+                        self.devices.release_inflight_shard(act.app, d, mb)
+                t.loaded = act.variant
+                if self.devices is not None:
+                    self.devices.on_load(act.app, act.variant)
+                # Global budget only: an admission load may transiently
+                # overshoot one chip mid-downgrade (policies are
+                # device-blind); per-device limits are enforced at
+                # reservation (staged) and at admission resolution.
+                try:
+                    self.check_invariant()
+                except AssertionError as e:
+                    raise A.PlanError(str(e)) from None
+        elif isinstance(act, A.Downgrade):
+            if t.loaded is not None and \
+                    act.variant.size_mb > t.loaded.size_mb + 1e-9:
+                raise A.PlanError(
+                    f"downgrade {act.app} to {act.variant.size_mb:.2f}MB "
+                    f"> loaded {t.loaded.size_mb:.2f}MB")
+            t.loaded = act.variant
+            if self.devices is not None:
+                self.devices.on_load(act.app, act.variant)
+        elif isinstance(act, A.Unload):
+            t.loaded = None
+            if self.devices is not None:
+                self.devices.on_load(act.app, None)
+        elif isinstance(act, A.Shrink):
+            if act.release_mb < 0:
+                raise A.PlanError(f"negative shrink release: {act}")
+            t.inflight_mb = max(0.0, t.inflight_mb - act.release_mb)
+        elif isinstance(act, A.CancelPrefetch):
+            t.inflight_mb = max(0.0, t.inflight_mb - act.claim_mb)
+            if act.shard_claims is not None and self.devices is not None:
+                # Device order, shard by shard: the accounting primitive
+                # cross-device migration rides.
+                for d, mb in enumerate(act.shard_claims):
+                    self.devices.release_inflight_shard(act.app, d, mb)
+        elif isinstance(act, A.ChargeKV):
+            if act.mb < 0:
+                raise A.PlanError(f"negative KV reservation: {act.mb}")
+            t.kv_mb += act.mb
+            try:
+                self.check_invariant()
+            except AssertionError as e:
+                raise A.PlanError(str(e)) from None
+        elif isinstance(act, A.EvictKV):
+            t.kv_mb = max(0.0, t.kv_mb - act.mb)
+        elif isinstance(act, A.MigrateShard):
+            if self.devices is None:
+                raise A.PlanError("MigrateShard without a DeviceLedger")
+            self.devices.move_shard(act.app, act.src, act.dst, act.mb)
+        else:
+            raise A.PlanError(f"unknown action {act!r}")

@@ -33,34 +33,16 @@ registered classes.
 from __future__ import annotations
 
 import heapq
+import warnings
 from dataclasses import dataclass
 from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Union
 
-
+from repro.core import actions as A
+# Policy-level plan records live in repro.core.actions (the IR layer);
+# re-exported here because this module is their historical home.
+from repro.core.actions import Eviction, ProcurePlan
 from repro.core.memory_state import INF, MemoryState
 from repro.core.model_zoo import ModelVariant
-
-
-@dataclass(frozen=True)
-class Eviction:
-    app: str
-    old: ModelVariant
-    new: Optional[ModelVariant]  # None = fully unloaded
-
-    @property
-    def freed_mb(self) -> float:
-        return self.old.size_mb - (self.new.size_mb if self.new else 0.0)
-
-
-@dataclass(frozen=True)
-class ProcurePlan:
-    app: str
-    variant: Optional[ModelVariant]  # None => inference failure
-    evictions: Tuple[Eviction, ...] = ()
-
-    @property
-    def ok(self) -> bool:
-        return self.variant is not None
 
 
 @dataclass(frozen=True)
@@ -219,13 +201,9 @@ class Policy:
         chosen variant leaves room for it up front (one weight transfer,
         no load-then-downgrade thrash at admission).  Returns None when
         no variant is fundable; the manager's fallback takes over."""
-        charge = self.demand_charge(demand)
-        state.pending_mb += charge
-        try:
+        with state.pending(self.demand_charge(demand)):
             plan = self.plan_procure(state, app, now, delta=delta,
                                      history=history)
-        finally:
-            state.pending_mb -= charge
         return plan if plan.ok else None
 
     def plan_headroom(self, state: MemoryState, app: str, now: float,
@@ -310,31 +288,42 @@ class BFE(Policy):
                 if a != app and state.tenants[a].loaded is not None
                 and state.tenants[a].inflight_mb == 0.0]
 
+    @staticmethod
+    def _variant_plan(state: MemoryState, app: str,
+                      variant: ModelVariant,
+                      victims: List[str]) -> Optional[ProcurePlan]:
+        """Best-fit eviction set funding one candidate variant: evict the
+        victim whose loaded size is closest from above to the remaining
+        need (largest-below when none covers), or None when even the
+        whole victim pool cannot fund it."""
+        evictions: List[Eviction] = []
+        remaining = list(victims)
+        while (_free_after(state, app, evictions) < variant.size_mb
+               and remaining):
+            need = variant.size_mb - _free_after(state, app, evictions)
+            covering = [a for a in remaining
+                        if state.tenants[a].loaded.size_mb >= need]
+            if covering:
+                pick = min(covering,
+                           key=lambda a: state.tenants[a].loaded.size_mb)
+            else:
+                pick = max(remaining,
+                           key=lambda a: state.tenants[a].loaded.size_mb)
+            remaining.remove(pick)
+            evictions.append(
+                Eviction(pick, state.tenants[pick].loaded, None))
+        if _free_after(state, app, evictions) >= variant.size_mb:
+            return ProcurePlan(app, variant, tuple(evictions))
+        return None
+
     def plan_procure(self, state: MemoryState, app: str, now: float, *,
                      delta: float, history: float) -> ProcurePlan:
         victims = self.victim_filter(state, app, now, delta=delta,
                                      history=history)
         for variant in state.tenants[app].zoo.variants:
-            evictions: List[Eviction] = []
-            remaining = list(victims)
-            while (_free_after(state, app, evictions) < variant.size_mb
-                   and remaining):
-                need = variant.size_mb - _free_after(state, app, evictions)
-                # best fit: smallest loaded size that still covers the
-                # need; if none covers it, take the largest available.
-                covering = [a for a in remaining
-                            if state.tenants[a].loaded.size_mb >= need]
-                if covering:
-                    pick = min(covering,
-                               key=lambda a: state.tenants[a].loaded.size_mb)
-                else:
-                    pick = max(remaining,
-                               key=lambda a: state.tenants[a].loaded.size_mb)
-                remaining.remove(pick)
-                evictions.append(
-                    Eviction(pick, state.tenants[pick].loaded, None))
-            if _free_after(state, app, evictions) >= variant.size_mb:
-                return ProcurePlan(app, variant, tuple(evictions))
+            plan = self._variant_plan(state, app, variant, victims)
+            if plan is not None:
+                return plan
         return ProcurePlan(app, None)
 
 
@@ -477,39 +466,115 @@ def _batch_iws_bfe() -> Policy:
 
 
 # ---------------------------------------------------------------------------
+# Plugin: cost-aware procurement over simulated plan candidates
+# ---------------------------------------------------------------------------
+@register_policy("cost-bfe")
+class CostBFE(BFE):
+    """Cost-aware BFE: rank candidate plans by what the variant is
+    *worth by the time it is ready*, not just by size.
+
+    BFE always procures the largest fundable variant — even when the
+    requester's next predicted request lands mid-transfer, so the big
+    load cannot finish in time and a smaller variant would have served
+    warmer for free.  This plugin enumerates one candidate plan per zoo
+    variant (the same best-fit eviction machinery), validates each with
+    ``MemoryState.simulate`` — plans are cheap, frozen data — and scores
+
+        score(v) = accuracy(v) · min(1, idle_ms / load_ms(v))
+
+    where ``idle_ms`` is the gap to the tenant's next predicted request
+    (∞ when unpredicted, which makes the score pure accuracy and the
+    choice identical to BFE).  The highest-scoring feasible plan wins;
+    ties keep the larger variant.  First post-IR payoff: a policy is
+    now a pure plan-emitting function ranked by simulate, no enactment
+    logic anywhere."""
+
+    def plan_procure(self, state: MemoryState, app: str, now: float, *,
+                     delta: float, history: float) -> ProcurePlan:
+        victims = self.victim_filter(state, app, now, delta=delta,
+                                     history=history)
+        t = state.tenants[app]
+        pred = t.predicted_next
+        idle = INF if pred is INF else (pred - now)
+        best: Optional[ProcurePlan] = None
+        best_score = -INF
+        for variant in t.zoo.variants:  # largest first
+            plan = self._variant_plan(state, app, variant, victims)
+            if plan is None:
+                continue
+            rplan = A.ResidencyPlan(
+                A.eviction_actions(plan.evictions)
+                + (A.staged_load_action(state, app, variant),))
+            if state.simulate(rplan) is not None:
+                # Not actually fundable as a transfer — e.g. a shard
+                # over its chip's budget, which the device-blind
+                # eviction math above cannot see.
+                continue
+            ready = (1.0 if idle == INF
+                     else min(1.0, max(idle, 0.0)
+                              / max(variant.load_ms, 1e-9)))
+            score = variant.accuracy * ready
+            if score > best_score + 1e-12:
+                best, best_score = plan, score
+        return best if best is not None else ProcurePlan(app, None)
+
+
+# ---------------------------------------------------------------------------
 # Deprecation shims: the bare-function POLICIES dict (pre-registry API)
 # ---------------------------------------------------------------------------
+def _warn_shim(name: str) -> None:
+    warnings.warn(
+        f"repro.core.policies.{name} is a deprecated shim; resolve "
+        f"policies through resolve_policy()/register_policy() instead",
+        DeprecationWarning, stacklevel=3)
+
+
 def lfe(state: MemoryState, app: str, now: float, *, delta: float,
         history: float = 0.0) -> ProcurePlan:
+    _warn_shim("lfe")
     return LFE().plan_procure(state, app, now, delta=delta, history=history)
 
 
 def bfe(state: MemoryState, app: str, now: float, *, delta: float,
         history: float = 0.0) -> ProcurePlan:
+    _warn_shim("bfe")
     return BFE().plan_procure(state, app, now, delta=delta, history=history)
 
 
 def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
            history: float = 0.0) -> ProcurePlan:
+    _warn_shim("ws_bfe")
     return WSBFE().plan_procure(state, app, now, delta=delta,
                                 history=history)
 
 
 def iws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
             history: float) -> ProcurePlan:
+    _warn_shim("iws_bfe")
     return IWSBFE().plan_procure(state, app, now, delta=delta,
                                  history=history)
 
 
-# Legacy string-keyed view of the four paper policies.  Kept verbatim for
-# callers that predate the registry; new code resolves through
-# ``resolve_policy`` so plugins participate too.
-POLICIES: Dict[str, Callable[..., ProcurePlan]] = {
+class _DeprecatedPolicies(dict):
+    """Legacy string-keyed view of the four paper policies.  Lookups warn:
+    callers should resolve through ``resolve_policy`` so plugins
+    participate too.  (Iteration/membership stay silent — enumerating
+    what exists is not the same as using the pre-registry API.)"""
+
+    def __getitem__(self, key):
+        warnings.warn(
+            "the POLICIES dict is a deprecated shim; use "
+            "resolve_policy()/available_policies() instead",
+            DeprecationWarning, stacklevel=2)
+        return super().__getitem__(key)
+
+
+POLICIES: Dict[str, Callable[..., ProcurePlan]] = _DeprecatedPolicies({
     "lfe": lfe,
     "bfe": bfe,
     "ws-bfe": ws_bfe,
     "iws-bfe": iws_bfe,
-}
+})
 
 
 # ---------------------------------------------------------------------------

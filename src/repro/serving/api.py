@@ -97,16 +97,29 @@ class LoaderSpec:
     loader stages per-shard on per-device streams, and ``MemoryState``
     gains per-chip budget ledgers (``device_budget_mb`` per chip; None
     derives a budget that covers the replication overhead, so tighter
-    values deliberately exercise the whole-load-failure path).  Requires
+    values deliberately exercise the whole-load-failure path; a tuple
+    gives *per-chip* budgets — a deliberately skewed mesh).  Requires
     ``prefetch=True`` — the reactive engine has no staging channel to
-    decompose."""
+    decompose.
+
+    ``migrate=True`` (default) arms cross-device victim migration: a
+    load blocked by one chip's budget moves a resident victim's shards
+    to chips with room (``MigrateShard`` actions, committed atomically
+    with the load) instead of failing into the downgrade path.
+    ``migrate=False`` keeps the PR-4 downgrade-only behaviour — the
+    benchmark's A/B baseline."""
     prefetch: bool = True
     sharded: bool = False
     mesh_shape: Tuple[int, ...] = (8,)
-    device_budget_mb: Optional[float] = None
+    device_budget_mb: "Optional[float | Tuple[float, ...]]" = None
+    migrate: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "mesh_shape", tuple(self.mesh_shape))
+        if isinstance(self.device_budget_mb, (tuple, list)):
+            object.__setattr__(self, "device_budget_mb",
+                               tuple(float(b)
+                                     for b in self.device_budget_mb))
         if self.sharded and not self.prefetch:
             raise ValueError(
                 "LoaderSpec(sharded=True) requires prefetch=True")
@@ -140,6 +153,11 @@ class ServingConfig:
     policy: Union[str, Policy, type] = "iws-bfe"
     fallback: Union[str, None, Any] = "desperation"
     delta_ms: float = 500.0
+    # Adapt each tenant's Δ from its measured arrival residuals (EWMA of
+    # |t_actual − t_pred|) instead of the fixed delta_ms — closes the
+    # predictor-quality loop behind prediction_hit_rate.  Off by default
+    # (the paper's fixed window).
+    adaptive_delta: bool = False
     history_ms: float = 3000.0
     batching: BatchingSpec = field(default_factory=BatchingSpec)
     loader: LoaderSpec = field(default_factory=LoaderSpec)
@@ -254,6 +272,7 @@ def build_server(config: ServingConfig, cls=None):
               policy=config.policy,
               fallback=config.fallback,
               delta_ms=config.delta_ms,
+              adaptive_delta=config.adaptive_delta,
               history_ms=config.history_ms,
               straggler_deadline_s=config.straggler_deadline_s,
               max_batch=config.batching.max_batch,
@@ -261,7 +280,8 @@ def build_server(config: ServingConfig, cls=None):
               prefetch=config.loader.prefetch,
               sharded_mesh=(config.loader.mesh_shape
                             if config.loader.sharded else None),
-              device_budget_mb=config.loader.device_budget_mb)
+              device_budget_mb=config.loader.device_budget_mb,
+              migrate=config.loader.migrate)
     ps = config.predictor
     for spec in config.tenants:
         from repro.configs import get_config

@@ -44,6 +44,7 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional,
 import jax
 import numpy as np
 
+from repro.core import actions as RA
 from repro.core.manager import BatchAdmission
 from repro.core.policies import DemandContext, ProcurePlan
 from repro.core.simulator import Workload, generate_workload
@@ -73,7 +74,15 @@ class TenantExecutor(Protocol):
 
 
 class LoaderChannel(Protocol):
-    """The background staging pipeline, as the engine drives it."""
+    """The background staging pipeline, as the engine drives it.
+
+    ``execute`` is the residency-IR entry point: the engine (and the
+    host's prefetch hook) compile policy plans to
+    :class:`~repro.core.actions.ResidencyPlan` groups, the channel
+    applies each group atomically through ``MemoryState.apply`` and
+    translates the actions to its physical stage ops; ``on_action``
+    fires per action as its effect lands (a staged load's at commit).
+    ``enqueue`` remains the ProcurePlan-shaped wrapper."""
 
     inflight: Mapping[str, Any]
     on_event: Optional[Callable[[float, str, str, float], None]]
@@ -85,13 +94,18 @@ class LoaderChannel(Protocol):
     load_overlap_ms: float
     fits_scheduled: int
 
+    def execute(self, plan: RA.ResidencyPlan, now_ms: float, *,
+                demand: bool = ..., predicted_ms: float = ...,
+                on_action: Optional[Callable[[RA.Action, float], None]]
+                = ...) -> Any: ...
     def enqueue(self, plan: ProcurePlan, now_ms: float, *,
                 demand: bool = ..., predicted_ms: float = ...) -> Any: ...
     def reap(self, now_ms: float) -> List[Any]: ...
     def cancel(self, app: str, now_ms: float) -> Any: ...
     def shrink_inflight(self, app: str, variant: Any,
                         now_ms: float) -> Any: ...
-    def cancel_stale(self, now_ms: float, delta_ms: float,
+    def cancel_stale(self, now_ms: float,
+                     delta_ms: "float | Callable[[str], float]",
                      has_queued: Callable[[str], bool]) -> int: ...
     def peek_use(self, app: str) -> Any: ...
     def take_use(self, app: str, warm: bool) -> Any: ...
@@ -152,7 +166,7 @@ class EngineEvent:
     on a sharded mesh, per-device ``weights + claims ≤ chip budget``."""
     t_ms: float
     # submit | admit | reject | retire | prefetch | demand | load |
-    # cancel | shrink
+    # cancel | shrink | migrate
     kind: str
     app: str
     kv_mb: float
@@ -403,7 +417,12 @@ class ServingEngine:
                         if plan is not None:
                             break
             if plan is not None:
-                self.loader.enqueue(plan, now, demand=True)
+                # Compile the policy's plan to the residency IR and hand
+                # it to the channel: evictions + the staged load commit
+                # as one atomic group (a stale plan enacts *nothing*).
+                self.loader.execute(
+                    RA.ResidencyPlan(RA.procure_actions(plan, staged=True)),
+                    now, demand=True)
 
     def _reap_loads(self, now: float) -> None:
         """Commit loads whose virtual transfer has finished and measure
@@ -531,6 +550,11 @@ class ServingEngine:
             shards = getattr(self.loader, "shards_landed", None)
             if shards is not None:
                 out["shards_landed"] = shards
+        devices = self.host.manager.state.devices
+        if devices is not None:
+            # Cross-device victim migrations (admission + loader paths;
+            # the ledger counts them where the moves commit).
+            out["shards_migrated"] = devices.shards_migrated
         if not self.results:
             out["warm_ratio"] = 0.0
             return out

@@ -32,26 +32,41 @@ gap:
   (``load_overlap_ms``) as the time other tenants spent executing inside
   the load interval.
 
-Lifecycle of one load::
+Every residency mutation here is expressed in the action IR
+(:mod:`repro.core.actions`) and committed through the one transactional
+applier, ``MemoryState.apply``: :meth:`BackgroundLoader.execute` takes a
+:class:`~repro.core.actions.ResidencyPlan`, applies it atomically (a
+stale plan rolls back whole — its evictions are *not* left behind), then
+translates each action to this loader's physical stage ops; per-action
+completion callbacks fire as each action's effect lands (instantaneous
+actions immediately, a staged load's at commit).  ``enqueue`` survives
+as the ProcurePlan-shaped wrapper.
 
-    enqueue(plan)  ->  in-flight (charge reserved, evictions enacted,
+Lifecycle of one load (the action-record state machine: ``staging`` →
+``committed`` | ``cancelled``, one-way — a record that has left
+``staging`` can never release its claim again)::
+
+    execute([... , Load(staged=True)])
+                   ->  in-flight (claim reserved, evictions enacted,
                        device_put queued on the worker)
-        |-- reap(now >= ready_ms)  ->  committed (state.load, charge
-        |                              released, awaiting first use)
+        |-- reap(now >= ready_ms)  ->  committed (Load commit applied:
+        |                              claim converts to weights,
+        |                              awaiting first use)
         |       |-- first admit    ->  prefetch hit (warm) or demand-cold
         |-- shrink_inflight(..)    ->  claim shrunk to a smaller variant
         |                              (one smaller transfer instead of
         |                              cancel-then-demand)
-        |-- cancel(..)             ->  charge released, device restored,
-                                       counted as wasted prefetch
+        |-- cancel(..)             ->  cancelled (claim released, device
+                                       restored, counted as wasted)
 """
 from __future__ import annotations
 
 import math
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import actions as A
 from repro.core.model_zoo import ModelVariant
 from repro.core.policies import ProcurePlan
 
@@ -59,6 +74,9 @@ INF = math.inf
 
 # (t_ms, kind, app, mb) — the engine mirrors these into its audit trail.
 LoadEventHook = Callable[[float, str, str, float], None]
+
+# (action, t_ms) — per-action completion hook for LoaderChannel.execute.
+ActionHook = Callable[[A.Action, float], None]
 
 
 @dataclass
@@ -72,6 +90,16 @@ class InflightLoad:
     demand: bool  # a request is already waiting (vs. predictor-driven)
     predicted_ms: float  # the prediction that justified a prefetch
     future: Future  # the wall-clock device staging task
+    # Action-record state machine: "staging" -> "committed"|"cancelled".
+    # One-way: release/commit paths check-and-set, so a stale reference
+    # (e.g. a cancel racing a shrink's restage) can never double-release
+    # the claim — the new record owns it.
+    state: str = field(default="staging")
+    on_action: Optional[ActionHook] = None  # fires at commit
+
+    @property
+    def staging(self) -> bool:
+        return self.state == "staging"
 
 
 @dataclass
@@ -169,41 +197,95 @@ class BackgroundLoader:
     def enqueue(self, plan: ProcurePlan, now_ms: float, *,
                 demand: bool = False,
                 predicted_ms: float = INF) -> Optional[InflightLoad]:
-        """Start a background load for ``plan.app``'s chosen variant.
-
-        The plan's evictions are enacted in the accounting immediately
-        (their physical downgrades ride the same worker queue), and the
-        load's *additional* footprint over the currently loaded variant
-        is reserved as an in-flight charge.  Returns None when there is
-        nothing to do (already in flight / already resident / the plan
-        would not grow the tenant / the plan went stale).
-        """
+        """Start a background load for ``plan.app``'s chosen variant:
+        the ProcurePlan-shaped wrapper over :meth:`execute` — victims'
+        evictions plus one staged load, compiled to a ResidencyPlan and
+        applied atomically.  Returns None when there is nothing to do
+        (already in flight / already resident / the plan would not grow
+        the tenant / the plan went stale — in which case *nothing* is
+        enacted, evictions included)."""
         if plan is None or plan.variant is None:
             return None
-        app, variant = plan.app, plan.variant
-        if app in self.inflight:
+        return self.execute(
+            A.ResidencyPlan(A.procure_actions(plan, staged=True)),
+            now_ms, demand=demand, predicted_ms=predicted_ms)
+
+    def execute(self, rplan: A.ResidencyPlan, now_ms: float, *,
+                demand: bool = False, predicted_ms: float = INF,
+                on_action: Optional[ActionHook] = None
+                ) -> Optional[InflightLoad]:
+        """Enact a :class:`~repro.core.actions.ResidencyPlan` through
+        this staging channel.
+
+        The whole plan commits against ``MemoryState`` in one
+        transaction (``apply``; an infeasible plan rolls back and
+        returns None), then every action is translated to the loader's
+        physical ops in plan order: evictions/loads ride the staging
+        worker, a ``Load(staged=True)`` becomes an in-flight transfer
+        tracked until :meth:`reap` commits it.  ``on_action(action,
+        t_ms)`` fires as each action's effect lands — instantaneous
+        actions during this call, the staged load's at commit time.
+        Returns the in-flight record when the plan staged a transfer.
+        """
+        rplan = self._concretize(rplan, now_ms)
+        if rplan is None:
             return None
-        state = self.manager.state
-        t = state.tenants[app]
-        if t.loaded is not None and variant.size_mb <= t.loaded.size_mb:
-            return None  # downgrades are admission-time decisions
-        for ev in plan.evictions:
-            state.load(ev.app, ev.new)
-            self.stage(ev.app, ev.new)
-        charge = variant.size_mb - (t.loaded.size_mb if t.loaded else 0.0)
-        if state.free_mb < charge - 1e-9:
-            return None  # plan went stale between planning and enqueue
-        state.reserve_inflight(app, charge)
-        ld = InflightLoad(
-            app=app, variant=variant, t_enqueue_ms=now_ms,
-            ready_ms=now_ms + variant.load_ms, charge_mb=charge,
-            demand=demand, predicted_ms=predicted_ms,
-            future=self.stage(app, variant))
-        self.inflight[app] = ld
-        if demand:
-            self.demand_loads += 1
-        self._emit(now_ms, "demand" if demand else "prefetch", app, charge)
+        try:
+            self.manager.state.apply(rplan)
+        except A.PlanError:
+            return None  # plan went stale between planning and execute
+        ld: Optional[InflightLoad] = None
+        for act in rplan:
+            staged = self._perform(act, now_ms, demand=demand,
+                                   predicted_ms=predicted_ms,
+                                   on_action=on_action)
+            ld = staged if staged is not None else ld
         return ld
+
+    # -- plan translation hooks (overridden by the sharded channel) ------
+    def _concretize(self, rplan: A.ResidencyPlan, now_ms: float
+                    ) -> Optional[A.ResidencyPlan]:
+        """Resolve staged loads to concrete claims; None = nothing to do
+        (duplicate in-flight load, or a plan that would not grow the
+        tenant — downgrades are admission-time decisions)."""
+        state = self.manager.state
+        acts = []
+        for act in rplan:
+            if isinstance(act, A.Load) and act.staged:
+                t = state.tenants[act.app]
+                if act.app in self.inflight:
+                    return None
+                if t.loaded is not None and \
+                        act.variant.size_mb <= t.loaded.size_mb:
+                    return None
+                act = A.concretize_load(act, state)
+            acts.append(act)
+        return A.ResidencyPlan(tuple(acts))
+
+    def _perform(self, act: A.Action, now_ms: float, *, demand: bool,
+                 predicted_ms: float,
+                 on_action: Optional[ActionHook]
+                 ) -> Optional[InflightLoad]:
+        """Translate one applied action to this loader's physical ops."""
+        if isinstance(act, A.Load) and act.staged:
+            ld = InflightLoad(
+                app=act.app, variant=act.variant, t_enqueue_ms=now_ms,
+                ready_ms=now_ms + act.variant.load_ms,
+                charge_mb=act.claim_mb, demand=demand,
+                predicted_ms=predicted_ms,
+                future=self.stage(act.app, act.variant),
+                on_action=on_action)
+            self.inflight[act.app] = ld
+            if demand:
+                self.demand_loads += 1
+            self._emit(now_ms, "demand" if demand else "prefetch",
+                       act.app, act.claim_mb)
+            return ld
+        if isinstance(act, A.RESIDENCY_ACTIONS):
+            self.stage(act.app, act.variant)
+        if on_action is not None:
+            on_action(act, now_ms)
+        return None
 
     def earliest_ready(self) -> float:
         return min((ld.ready_ms for ld in self.inflight.values()),
@@ -221,9 +303,12 @@ class BackgroundLoader:
         for app in [a for a, ld in self.inflight.items()
                     if ld.ready_ms <= now_ms]:
             ld = self.inflight.pop(app)
+            if not ld.staging:
+                continue  # a stale record cannot commit twice
             ld.future.result()
-            state.release_inflight(app, ld.charge_mb)
-            state.load(app, ld.variant)
+            commit = A.Load(app, ld.variant, claim_mb=ld.charge_mb)
+            state.apply(A.ResidencyPlan((commit,)))
+            ld.state = "committed"
             rec = LoadRecord(
                 app=app, bits=ld.variant.bits,
                 load_ms=ld.variant.load_ms,
@@ -233,6 +318,8 @@ class BackgroundLoader:
             self.history.append(rec)
             self.loads_committed += 1
             self._emit(ld.ready_ms, "load", app, ld.variant.size_mb)
+            if ld.on_action is not None:
+                ld.on_action(commit, ld.ready_ms)
             out.append(rec)
         return out
 
@@ -261,7 +348,7 @@ class BackgroundLoader:
         there is nothing to shrink (not in flight / not smaller / the
         target is not above what is already resident)."""
         ld = self.inflight.get(app)
-        if ld is None or ld.demand or variant is None:
+        if ld is None or ld.demand or variant is None or not ld.staging:
             return None
         if variant.size_mb >= ld.variant.size_mb:
             return None
@@ -271,7 +358,7 @@ class BackgroundLoader:
         if new_charge <= 0.0:
             return None  # below residency: that is a cancel, not a shrink
         freed = ld.charge_mb - new_charge
-        state.release_inflight(app, freed)
+        state.apply(A.ResidencyPlan((A.Shrink(app, variant, freed),)))
         # Restage the smaller variant; if the big move already ran (or is
         # running) the new stage lands after it on the same worker, so
         # the device converges to the shrunk variant either way.  The
@@ -293,10 +380,12 @@ class BackgroundLoader:
         release the in-flight charge and restore the device to what the
         accounting says is loaded, in case the staging already ran."""
         ld = self.inflight.pop(app, None)
-        if ld is None:
+        if ld is None or not ld.staging:
             return None
+        ld.state = "cancelled"  # before the release: one-way, no repeats
         state = self.manager.state
-        state.release_inflight(app, ld.charge_mb)
+        state.apply(A.ResidencyPlan(
+            (A.CancelPrefetch(app, ld.charge_mb),)))
         self.prefetch_wasted += 1
         if not ld.future.cancel():
             # The worker already staged (or is staging) the new variant:
@@ -305,15 +394,22 @@ class BackgroundLoader:
         self._emit(now_ms, "cancel", app, -ld.charge_mb)
         return ld
 
-    def cancel_stale(self, now_ms: float, delta_ms: float,
+    def cancel_stale(self, now_ms: float,
+                     delta_ms: "float | Callable[[str], float]",
                      has_queued: Callable[[str], bool]) -> int:
         """Cancel predictor-driven prefetches whose predicted request
         window has fully passed with no request in sight — the in-flight
         memory goes back to the pool instead of squatting on a wrong
-        guess.  Demand loads are never stale (a batch is waiting)."""
+        guess.  Demand loads are never stale (a batch is waiting).
+        ``delta_ms`` may be a per-tenant callable (the adaptive window's
+        ``delta_for``), so staleness agrees with the same Δ the window
+        checks use."""
+        def delta(app: str) -> float:
+            return delta_ms(app) if callable(delta_ms) else delta_ms
+
         stale = [a for a, ld in self.inflight.items()
                  if not ld.demand and not has_queued(a)
-                 and now_ms > ld.predicted_ms + delta_ms]
+                 and now_ms > ld.predicted_ms + delta(a)]
         for app in stale:
             self.cancel(app, now_ms)
         return len(stale)

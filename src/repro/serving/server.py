@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import actions as RA
 from repro.core.manager import EdgeMultiAI
 from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.core.predictor import RequestPredictor
@@ -166,7 +167,10 @@ class EdgeServer:
                  prefetch: bool = True, history_ms: float = 3000.0,
                  fallback="desperation",
                  sharded_mesh: Optional[Tuple[int, ...]] = None,
-                 device_budget_mb: Optional[float] = None):
+                 device_budget_mb: "Optional[float | Tuple[float, ...]]"
+                 = None,
+                 migrate: bool = True,
+                 adaptive_delta: bool = False):
         self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
@@ -178,7 +182,16 @@ class EdgeServer:
         # and installs per-device budget ledgers; None = single device.
         self.sharded_mesh = (tuple(sharded_mesh)
                              if sharded_mesh is not None else None)
-        self.device_budget_mb = device_budget_mb
+        # One float = uniform per-chip budgets; a tuple gives per-chip
+        # (skewed) budgets — the regime cross-device victim migration
+        # exists for.  None derives a uniform budget covering the worst
+        # tenant's replication overhead.
+        self.device_budget_mb = (tuple(device_budget_mb)
+                                 if isinstance(device_budget_mb,
+                                               (tuple, list))
+                                 else device_budget_mb)
+        self.migrate = migrate
+        self.adaptive_delta = adaptive_delta
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
@@ -248,7 +261,8 @@ class EdgeServer:
         self.manager = EdgeMultiAI(
             zoos, self.budget_mb, policy=self.policy,
             delta_ms=self.delta_ms, history_ms=self.history_ms,
-            loader=loader_cb, fallback=self.fallback)
+            loader=loader_cb, fallback=self.fallback,
+            adaptive_delta=self.adaptive_delta, migrate=self.migrate)
         if self.sharded_mesh is not None:
             if not self.prefetch:
                 raise ValueError(
@@ -260,10 +274,16 @@ class EdgeServer:
             self.loader = ShardedLoaderChannel(
                 self.manager,
                 n_devices=self.manager.state.devices.n_devices,
-                stage_fn=stage)
+                stage_fn=stage, migrate=self.migrate)
         else:
             self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
                            if self.prefetch else None)
+        if self.loader is not None:
+            # Admission-path migrations land in the same audit trail as
+            # loader-path ones (the engine mirrors loader events).
+            self.manager.on_migrate = (
+                lambda t, app, mb: self.loader._emit(t, "migrate",
+                                                     app, mb))
         self.engine = ServingEngine(
             self, max_batch=self.max_batch,
             batch_window_ms=self.batch_window_ms, loader=self.loader)
@@ -285,12 +305,22 @@ class EdgeServer:
         n = mesh.size
         fracs = {name: SH.weight_shard_fraction(t.cfg, mesh)
                  for name, t in self.tenants.items()}
-        per_dev = (self.device_budget_mb
-                   if self.device_budget_mb is not None
-                   else self.budget_mb / n * max(
-                       f * n for f in fracs.values()))
+        if isinstance(self.device_budget_mb, tuple):
+            # Per-chip (skewed) budgets: the migration regime — one
+            # tight chip while neighbors keep slack.
+            if len(self.device_budget_mb) != n:
+                raise ValueError(
+                    f"{len(self.device_budget_mb)} device budgets for "
+                    f"a {n}-chip mesh")
+            budgets = self.device_budget_mb
+        else:
+            per_dev = (self.device_budget_mb
+                       if self.device_budget_mb is not None
+                       else self.budget_mb / n * max(
+                           f * n for f in fracs.values()))
+            budgets = (per_dev,) * n
         return DeviceLedger(
-            (per_dev,) * n,
+            budgets,
             split_fn=lambda app, v: SH.variant_shard_mb(
                 v.size_mb, n, fracs[app]))
 
@@ -323,10 +353,13 @@ class EdgeServer:
             t_pred = tr.predictor.predict_next_time()
             self.manager.set_prediction(name, t_pred)
             theta = tr.zoo.largest.load_ms
-            in_window = (t_pred - self.delta_ms - theta <= now_ms
-                         <= t_pred + self.delta_ms)
+            # Per-tenant Δ: the configured constant, or the residual-
+            # adapted window when ``adaptive_delta`` is on.
+            delta = self.manager.delta_for(name)
+            in_window = (t_pred - delta - theta <= now_ms
+                         <= t_pred + delta)
             if self.loader is None:
-                if t_pred - self.delta_ms - theta <= now_ms:
+                if t_pred - delta - theta <= now_ms:
                     self.manager.proactive_load(name, now_ms)
             elif in_window:
                 # Only prefetch inside the predicted window: past its
@@ -341,11 +374,15 @@ class EdgeServer:
                     # waited out the transfer as a warm start.
                     plan = self.manager.plan_prefetch(name, now_ms)
                     if plan is not None:
-                        self.loader.enqueue(plan, now_ms,
-                                            predicted_ms=t_pred)
+                        self.loader.execute(
+                            RA.ResidencyPlan(
+                                RA.procure_actions(plan, staged=True)),
+                            now_ms, predicted_ms=t_pred)
         if self.loader is not None and self.engine is not None:
+            # Per-tenant Δ so staleness agrees with the (possibly
+            # adaptive) window that justified the prefetch.
             self.loader.cancel_stale(
-                now_ms, self.delta_ms,
+                now_ms, self.manager.delta_for,
                 has_queued=lambda a: self.engine.batcher.queued(a) > 0)
 
     def next_prefetch_trigger(self, now_ms: float) -> float:
@@ -358,7 +395,8 @@ class EdgeServer:
             t = self.manager.state.tenants[name]
             if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
                 continue
-            trig = (tr.predictor.predict_next_time() - self.delta_ms
+            trig = (tr.predictor.predict_next_time()
+                    - self.manager.delta_for(name)
                     - tr.zoo.largest.load_ms)
             if now_ms < trig < out:
                 out = trig
@@ -443,9 +481,14 @@ class EdgeServer:
         }
         for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
                     "prefetch_shrunk", "demand_loads", "loads_committed",
-                    "load_overlap_ms", "fits_scheduled", "shards_landed"):
+                    "load_overlap_ms", "fits_scheduled", "shards_landed",
+                    "shards_migrated"):
             if key in eng:
                 out[key] = eng[key]
+        if self.adaptive_delta:
+            # The residual-adapted prediction windows, per tenant.
+            out["delta_ms"] = {name: self.manager.delta_for(name)
+                               for name in self.tenants}
         if self.manager.state.devices is not None:
             led = self.manager.state.devices
             out["device_used_mb"] = led.device_used()

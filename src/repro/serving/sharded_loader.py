@@ -40,14 +40,16 @@ follow-on.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from concurrent.futures import CancelledError, Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
+from repro.core import actions as A
 from repro.core.model_zoo import ModelVariant
-from repro.core.policies import ProcurePlan
-from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
+from repro.serving.loader import (ActionHook, BackgroundLoader,
+                                  InflightLoad, LoadRecord)
 
 INF = math.inf
 
@@ -74,7 +76,16 @@ class ShardedInflightLoad(InflightLoad):
     """An :class:`InflightLoad` decomposed into per-device shard stages
     (``ready_ms`` is the last shard's landing)."""
     shards: List[ShardStage] = field(default_factory=list)
-    cancelled: bool = False  # gates the commit move on the staging channel
+
+    @property
+    def cancelled(self) -> bool:
+        """Gates the commit move on the staging channel (read from the
+        worker thread; the action-record state machine is the truth)."""
+        return self.state == "cancelled"
+
+    @property
+    def shard_claims(self) -> Tuple[float, ...]:
+        return tuple(sh.claim_mb for sh in self.shards)
 
 
 class ShardedLoaderChannel(BackgroundLoader):
@@ -85,17 +96,28 @@ class ShardedLoaderChannel(BackgroundLoader):
     to per-device resident MB; it defaults to the manager state's
     :class:`DeviceLedger` split (when one is installed) or an even
     ``1/n`` split.  ``stage_shard_fn`` is the per-device stream op.
+
+    ``migrate=True`` (default) arms **cross-device victim migration**:
+    when one chip's ledger budget blocks a load while neighbors have
+    room, :func:`repro.core.actions.plan_migration` emits
+    ``MigrateShard`` actions that move a resident victim's shards to the
+    free chips, and the whole group — moves, evictions, staged load —
+    commits as one atomic plan instead of failing the load into the
+    downgrade path.  ``migrate=False`` is the PR-4 behaviour (one
+    overfull chip fails the whole load cleanly).
     """
 
     def __init__(self, manager, n_devices: int = 8, *,
                  stage_fn=None,
                  shard_fn: Optional[Callable[
                      [str, ModelVariant], Tuple[float, ...]]] = None,
-                 stage_shard_fn: Optional[ShardStageFn] = None):
+                 stage_shard_fn: Optional[ShardStageFn] = None,
+                 migrate: bool = True):
         if n_devices < 1:
             raise ValueError(f"n_devices must be >= 1, got {n_devices}")
         super().__init__(manager, stage_fn=stage_fn)
         self.n_devices = n_devices
+        self.migrate = migrate
         self._shard_fn = shard_fn
         self._stage_shard_fn = stage_shard_fn or (
             lambda app, variant, device, n: None)
@@ -107,7 +129,21 @@ class ShardedLoaderChannel(BackgroundLoader):
         # overlap measurement at the next reap (their transfer was real
         # and really was hidden — the honest half of a wasted prefetch).
         self._partials: List[LoadRecord] = []
+        # Shard schedules built at concretize time, carried to _perform
+        # keyed by the concrete Load action (one execute() at a time on
+        # the engine thread; cleared after every execute).
+        self._staged_shards: dict = {}
         self.shards_landed = 0
+
+    def execute(self, rplan: A.ResidencyPlan, now_ms: float, *,
+                demand: bool = False, predicted_ms: float = INF,
+                on_action: Optional[ActionHook] = None):
+        try:
+            return super().execute(rplan, now_ms, demand=demand,
+                                   predicted_ms=predicted_ms,
+                                   on_action=on_action)
+        finally:
+            self._staged_shards.clear()  # drop leftovers of failed plans
 
     # -- shard geometry --------------------------------------------------
     def _split_mb(self, app: str, variant: Optional[ModelVariant]
@@ -127,10 +163,19 @@ class ShardedLoaderChannel(BackgroundLoader):
                       ) -> List[ShardStage]:
         """Decompose one load: per-device resident MB and claims, plus
         the shared-host-link virtual schedule (cumulative slots summing
-        to exactly ``variant.load_ms``)."""
-        shards_mb = self._split_mb(app, variant)
+        to exactly ``variant.load_ms``).  With a ledger installed the
+        target layout is the *projection* of the tenant's actual
+        holdings (a migrated layout persists through the reload) and the
+        claims are marginal over those holdings — so the reserve checks
+        validate exactly what the commit will place per chip."""
         loaded = self.manager.state.tenants[app].loaded
-        cur_mb = self._split_mb(app, loaded)
+        ledger = self.manager.state.devices
+        if ledger is not None and self._shard_fn is None:
+            shards_mb = ledger.projected(app, variant)
+            cur_mb = ledger.held(app, loaded)
+        else:
+            shards_mb = self._split_mb(app, variant)
+            cur_mb = self._split_mb(app, loaded)
         total = sum(shards_mb)
         out: List[ShardStage] = []
         t_cursor, global_left = now_ms, charge_mb
@@ -150,7 +195,7 @@ class ShardedLoaderChannel(BackgroundLoader):
 
     def _dispatch(self, app: str, variant: ModelVariant,
                   shards: List[ShardStage],
-                  ld_box: dict) -> Future:
+                  ld: "ShardedInflightLoad") -> Future:
         """Queue the per-device stream ops and the gated whole-variant
         commit move (same single staging channel as every other device
         mutation, so commits land in accounting order)."""
@@ -166,68 +211,107 @@ class ShardedLoaderChannel(BackgroundLoader):
                         sh.future.result()
                 except CancelledError:
                     pass
-            if not ld_box["ld"].cancelled:
+            if not ld.cancelled:
                 self._stage_fn(app, variant)
 
         return self._pool.submit(commit_move)
 
-    def _start_load(self, app: str, variant: ModelVariant, now_ms: float,
+    def _track_load(self, app: str, variant: ModelVariant, now_ms: float,
                     charge: float, shards: List[ShardStage], *,
-                    demand: bool,
-                    predicted_ms: float) -> ShardedInflightLoad:
-        """Reserve the whole load's claims (global + per-device) and
-        dispatch its shard stages; the caller has already fit-checked
-        the claims."""
-        state = self.manager.state
-        state.reserve_inflight(app, charge)
-        if state.devices is not None:
-            state.devices.reserve_inflight(
-                app, tuple(sh.claim_mb for sh in shards))
-        box: dict = {}
+                    demand: bool, predicted_ms: float,
+                    on_action: Optional[ActionHook] = None
+                    ) -> ShardedInflightLoad:
+        """Track an already-*applied* staged load (claims reserved by the
+        plan applier) and dispatch its shard stages."""
         ld = ShardedInflightLoad(
             app=app, variant=variant, t_enqueue_ms=now_ms,
             ready_ms=shards[-1].ready_ms if shards else now_ms,
             charge_mb=charge, demand=demand, predicted_ms=predicted_ms,
-            future=None, shards=shards)
-        box["ld"] = ld
-        ld.future = self._dispatch(app, variant, shards, box)
+            future=None, shards=shards, on_action=on_action)
+        ld.future = self._dispatch(app, variant, shards, ld)
         self.inflight[app] = ld
         return ld
 
-    # -- load lifecycle --------------------------------------------------
-    def enqueue(self, plan: ProcurePlan, now_ms: float, *,
-                demand: bool = False,
-                predicted_ms: float = INF
-                ) -> Optional[ShardedInflightLoad]:
-        """Start a sharded background load.  Same contract as the base
-        class, plus the per-device fit check: one shard over its chip's
-        budget fails the whole load before any claim lands."""
-        if plan is None or plan.variant is None:
-            return None
-        app, variant = plan.app, plan.variant
-        if app in self.inflight:
+    # -- plan translation -------------------------------------------------
+    def _concretize(self, rplan: A.ResidencyPlan, now_ms: float
+                    ) -> Optional[A.ResidencyPlan]:
+        """Resolve staged loads to concrete per-device shard claims; when
+        a chip's budget blocks the plan and migration is armed, prepend
+        the :func:`~repro.core.actions.plan_migration` moves so the whole
+        group commits atomically.  Returns None when the plan is a no-op
+        or remains unfundable — the tenant then rides the existing
+        admission downgrade/desperation path, exactly like PR 4."""
+        rplan = super()._concretize(rplan, now_ms)
+        if rplan is None:
             return None
         state = self.manager.state
-        t = state.tenants[app]
-        if t.loaded is not None and variant.size_mb <= t.loaded.size_mb:
-            return None  # downgrades are admission-time decisions
-        for ev in plan.evictions:
-            state.load(ev.app, ev.new)
-            self.stage(ev.app, ev.new)
-        charge = variant.size_mb - (t.loaded.size_mb if t.loaded else 0.0)
-        if state.free_mb < charge - 1e-9:
-            return None  # plan went stale between planning and enqueue
-        shards = self._build_shards(app, variant, now_ms, charge)
-        ledger = state.devices
-        if ledger is not None and not ledger.fits(
-                tuple(sh.claim_mb for sh in shards)):
-            return None  # a shard doesn't fit its chip: whole load fails
-        ld = self._start_load(app, variant, now_ms, charge, shards,
-                              demand=demand, predicted_ms=predicted_ms)
-        if demand:
-            self.demand_loads += 1
-        self._emit(now_ms, "demand" if demand else "prefetch", app, charge)
-        return ld
+        acts, load = [], None
+        for act in rplan:
+            if isinstance(act, A.Load) and act.staged:
+                shards = self._build_shards(act.app, act.variant, now_ms,
+                                            act.claim_mb)
+                act = dataclasses.replace(
+                    act, shard_claims=tuple(sh.claim_mb for sh in shards))
+                self._staged_shards[id(act)] = shards
+                load = act
+            acts.append(act)
+        out = A.ResidencyPlan(tuple(acts))
+        if state.simulate(out) is None:
+            return out
+        if not self.migrate or load is None or state.devices is None:
+            return None
+        # One chip over budget while neighbors idle: move a resident
+        # victim's shards to the free chips instead of failing the load.
+        # Victims the plan itself evicts are pinned (their downgrade
+        # re-derives the canonical split, which would undo the move).
+        evicted = tuple(a.app for a in out
+                        if isinstance(a, (A.Unload, A.Downgrade)))
+        moves = A.plan_migration(state, load.app, load.shard_claims,
+                                 exclude=evicted)
+        if moves is None:
+            return None
+        out = A.ResidencyPlan(moves + out.actions)
+        return out if state.simulate(out) is None else None
+
+    def _perform(self, act: A.Action, now_ms: float, *, demand: bool,
+                 predicted_ms: float,
+                 on_action: Optional[ActionHook]
+                 ) -> Optional[ShardedInflightLoad]:
+        if isinstance(act, A.Load) and act.staged:
+            # The schedule built at concretize time (pre-apply holdings)
+            # — its claims are exactly what the applier reserved.
+            shards = self._staged_shards.pop(id(act), None)
+            if shards is None:  # direct _perform use (tests/tools)
+                shards = self._build_shards(act.app, act.variant, now_ms,
+                                            act.claim_mb)
+                for sh, claim in zip(shards, act.shard_claims or ()):
+                    sh.claim_mb = claim
+            ld = self._track_load(act.app, act.variant, now_ms,
+                                  act.claim_mb, shards, demand=demand,
+                                  predicted_ms=predicted_ms,
+                                  on_action=on_action)
+            if demand:
+                self.demand_loads += 1
+            self._emit(now_ms, "demand" if demand else "prefetch",
+                       act.app, act.claim_mb)
+            return ld
+        if isinstance(act, A.MigrateShard):
+            # Physical per-device streams: re-stage the victim's shard
+            # on both chips (a no-op for the default hook; real
+            # per-shard device_put is the ROADMAP follow-on — the
+            # commit-time whole-variant move already converges).
+            loaded = self.manager.state.tenants[act.app].loaded
+            for dev in (act.src, act.dst):
+                self._device_pools[dev].submit(
+                    self._stage_shard_fn, act.app, loaded, dev,
+                    self.n_devices)
+            self._emit(now_ms, "migrate", act.app, act.mb)
+            if on_action is not None:
+                on_action(act, now_ms)
+            return None
+        return super()._perform(act, now_ms, demand=demand,
+                                predicted_ms=predicted_ms,
+                                on_action=on_action)
 
     def earliest_ready(self) -> float:
         """The next *commit* (last shard of the soonest-completing load)
@@ -249,7 +333,6 @@ class ShardedLoaderChannel(BackgroundLoader):
         out: List[LoadRecord] = self._partials
         self._partials = []
         state = self.manager.state
-        ledger = state.devices
         for app in list(self.inflight):
             ld = self.inflight[app]
             for sh in ld.shards:
@@ -258,14 +341,17 @@ class ShardedLoaderChannel(BackgroundLoader):
                     self.shards_landed += 1
             if not all(sh.landed for sh in ld.shards):
                 continue
+            if not ld.staging:  # a stale record cannot commit twice
+                del self.inflight[app]
+                continue
             del self.inflight[app]
             ld.future.result()  # wall-clock commit move absorbed here
-            for sh in ld.shards:  # claims convert to committed weights
-                state.release_inflight(app, sh.global_mb)
-                if ledger is not None:
-                    ledger.release_inflight_shard(app, sh.device,
-                                                  sh.claim_mb)
-            state.load(app, ld.variant)
+            # Claims convert to committed weights in one transaction;
+            # the applier walks the shard claims in device order.
+            commit = A.Load(app, ld.variant, claim_mb=ld.charge_mb,
+                            shard_claims=ld.shard_claims)
+            state.apply(A.ResidencyPlan((commit,)))
+            ld.state = "committed"
             rec = LoadRecord(
                 app=app, bits=ld.variant.bits,
                 load_ms=ld.variant.load_ms,
@@ -278,21 +364,27 @@ class ShardedLoaderChannel(BackgroundLoader):
             self.history.append(rec)
             self.loads_committed += 1
             self._emit(ld.ready_ms, "load", app, ld.variant.size_mb)
+            if ld.on_action is not None:
+                ld.on_action(commit, ld.ready_ms)
             out.append(rec)
         return out
 
-    def _release_load(self, ld: ShardedInflightLoad) -> None:
-        """Release a load's claims shard-by-shard (device order) and
-        restore any device whose stream op already ran."""
+    def _release_load(self, ld: ShardedInflightLoad) -> bool:
+        """Release a load's claims (shard-by-shard, device order, via the
+        plan applier) and restore any device whose stream op already
+        ran.  Guarded by the action-record state machine: a record that
+        already committed or cancelled — e.g. the old record of a shrink
+        whose shards are mid-release — returns False and releases
+        *nothing*, so the claims now owned by the replacement load can
+        never be double-released."""
+        if not ld.staging:
+            return False
+        ld.state = "cancelled"  # one-way, before any release lands
         state = self.manager.state
-        ledger = state.devices
+        state.apply(A.ResidencyPlan((
+            A.CancelPrefetch(ld.app, ld.charge_mb, ld.shard_claims),)))
         loaded = state.tenants[ld.app].loaded
-        ld.cancelled = True
         for sh in ld.shards:
-            state.release_inflight(ld.app, sh.global_mb)
-            if ledger is not None:
-                ledger.release_inflight_shard(ld.app, sh.device,
-                                              sh.claim_mb)
             if sh.future is not None and not sh.future.cancel():
                 self._device_pools[sh.device].submit(
                     self._stage_shard_fn, ld.app, loaded, sh.device,
@@ -301,13 +393,12 @@ class ShardedLoaderChannel(BackgroundLoader):
             # The commit move may already be past its gate: queue a
             # whole-variant restore behind it on the staging channel.
             self.stage(ld.app, loaded)
+        return True
 
-    def _retire_load(self, ld: ShardedInflightLoad) -> None:
-        """Release an abandoned load shard-by-shard and queue the honest
-        credit: its landed shards' transfer really was hidden, so a
-        partial record goes to the engine's next reap for overlap
-        measurement."""
-        self._release_load(ld)
+    def _queue_partial(self, ld: ShardedInflightLoad) -> None:
+        """Queue the honest credit for an abandoned load: its landed
+        shards' transfer really was hidden, so a partial record goes to
+        the engine's next reap for overlap measurement."""
         landed = [sh for sh in ld.shards if sh.landed]
         if landed:
             self._partials.append(LoadRecord(
@@ -321,15 +412,22 @@ class ShardedLoaderChannel(BackgroundLoader):
                     for sh in landed),
                 partial=True))
 
+    def _retire_load(self, ld: ShardedInflightLoad) -> bool:
+        """Release an abandoned load and queue its partial credit; False
+        (and no release) when the record already left ``staging``."""
+        if not self._release_load(ld):
+            return False
+        self._queue_partial(ld)
+        return True
+
     def cancel(self, app: str,
                now_ms: float) -> Optional[ShardedInflightLoad]:
         """Release the claim shard-by-shard and restore the device; the
         landed shards' transfer still counts toward ``load_overlap_ms``
         (queued for the engine's next reap)."""
         ld = self.inflight.pop(app, None)
-        if ld is None:
+        if ld is None or not self._retire_load(ld):
             return None
-        self._retire_load(ld)
         self.prefetch_wasted += 1
         self._emit(now_ms, "cancel", app, -ld.charge_mb)
         return ld
@@ -337,11 +435,14 @@ class ShardedLoaderChannel(BackgroundLoader):
     def shrink_inflight(self, app: str, variant: Optional[ModelVariant],
                         now_ms: float
                         ) -> Optional[ShardedInflightLoad]:
-        """Sharded shrink: release the old shard claims (crediting landed
-        shards' overlap), then restage the smaller variant's shards from
-        ``now`` under the same in-flight entry."""
+        """Sharded shrink: one atomic plan releases the old shard claims
+        and reserves the smaller variant's, then the smaller transfer
+        restages from ``now`` under a fresh in-flight record (the old
+        record leaves ``staging`` first, so no stale path can release
+        the new record's claims).  The landed shards' overlap is still
+        credited via a partial record."""
         ld = self.inflight.get(app)
-        if ld is None or ld.demand or variant is None:
+        if ld is None or ld.demand or variant is None or not ld.staging:
             return None
         if variant.size_mb >= ld.variant.size_mb:
             return None
@@ -351,13 +452,25 @@ class ShardedLoaderChannel(BackgroundLoader):
         if new_charge <= 0.0:
             return None  # below residency: that is a cancel, not a shrink
         del self.inflight[app]
-        self._retire_load(ld)
-        # The shrunk claims always fit: strictly less was just released
-        # from the same devices, so no ledger fit check is needed here.
         shards = self._build_shards(app, variant, now_ms, new_charge)
-        new_ld = self._start_load(app, variant, now_ms, new_charge,
+        ld.state = "cancelled"  # before the claims move: one-way
+        # Release-then-reserve in one transaction — the shrunk claims
+        # always fit (strictly less on the same devices), and a failure
+        # anywhere would roll the whole exchange back.
+        state.apply(A.ResidencyPlan((
+            A.CancelPrefetch(app, ld.charge_mb, ld.shard_claims),
+            A.Load(app, variant, staged=True, claim_mb=new_charge,
+                   shard_claims=tuple(sh.claim_mb for sh in shards)),
+        )))
+        for sh in ld.shards:
+            if sh.future is not None:
+                sh.future.cancel()
+        ld.future.cancel()
+        self._queue_partial(ld)
+        new_ld = self._track_load(app, variant, now_ms, new_charge,
                                   shards, demand=ld.demand,
-                                  predicted_ms=ld.predicted_ms)
+                                  predicted_ms=ld.predicted_ms,
+                                  on_action=ld.on_action)
         self.prefetch_shrunk += 1
         self._emit(now_ms, "shrink", app, -(ld.charge_mb - new_charge))
         return new_ld

@@ -149,6 +149,35 @@ def test_sharded_shrink_restages_smaller_shards():
     loader.close()
 
 
+def test_shrink_mid_release_cannot_double_release_claims():
+    """The cancel-vs-shrink race: shrinking an in-flight prefetch retires
+    the old action record and reserves fresh (smaller) claims under a new
+    one — a stale path still holding the OLD record (its shards
+    mid-release) must not release the NEW record's claims.  The record
+    state machine (staging → cancelled, one-way) guards every release."""
+    mgr = make_manager()
+    loader = ShardedLoaderChannel(mgr, n_devices=N_DEV)
+    old = loader.enqueue(mgr.plan_proactive("a", 0.0), 0.0,
+                         predicted_ms=2000.0)
+    small = mgr.state.tenants["a"].zoo.smallest
+    new = loader.shrink_inflight("a", small, 100.0)
+    assert new is not None and new is not old
+    assert old.state == "cancelled" and new.staging
+    st, led = mgr.state, mgr.state.devices
+    assert st.inflight_mb == pytest.approx(300.0)
+    claims_before = {a: list(c) for a, c in led.inflight.items()}
+    # The race, replayed deliberately: retire the old record again.
+    assert loader._retire_load(old) is False, "stale release refused"
+    assert st.inflight_mb == pytest.approx(300.0), "no double release"
+    assert {a: list(c) for a, c in led.inflight.items()} == claims_before
+    # And the live record releases exactly once under repeated cancels.
+    assert loader.cancel("a", 200.0) is not None
+    assert loader.cancel("a", 200.0) is None
+    assert st.inflight_mb == 0.0 and led.inflight == {}
+    assert loader.prefetch_wasted == 1
+    loader.close()
+
+
 # ---------------------------------------------------------------------------
 # Engine integration: downgrade path, invariant, determinism
 # ---------------------------------------------------------------------------
