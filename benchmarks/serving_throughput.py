@@ -43,6 +43,16 @@ the *same* trace:
   single-stream loader's on the same trace (landed shards of cancelled
   loads are credited honestly; the single-stream loader credits a
   cancelled load nothing).
+* **paged** — continuous batching against the paged KV pool, A/B'd
+  against the batch-scalar engine on a deliberately KV-contended sim
+  trace (budget too small to fund a whole max_batch cache, arrivals
+  dense enough that the batching window forms full batches).  The
+  batch-scalar engine admits the whole batch's cache as one scalar and
+  rejects it wholesale; page-granular admission keeps accepting single
+  requests.  ``serving/paged/kv_rejections`` is emitted as the
+  *reduction* (scalar − paged, higher is better) so the one-sided gate
+  can hold "strictly fewer rejections";
+  ``serving/paged/warm_ratio`` must stay at least the scalar run's.
 * **migration** — the sharded engine on a *device-skewed* mesh (chip 0
   deliberately tight, neighbors roomy), with cross-device victim
   migration on vs off.  With migration off, the tight chip fails every
@@ -135,6 +145,30 @@ def _skewed_budgets(srv: EdgeServer, n: int = 8, tight: float = 0.7,
     return (tight_mb,) + (roomy * shard16,) * (n - 1)
 
 
+PAGED_TENANTS = ["tinyllama-1.1b", "mamba2-780m"]
+
+
+def _run_paged(continuous: bool):
+    """One sim-executor run of the KV-contention trace: the derived
+    budget minus the serving tenant's smallest weights cannot fund a
+    full batch's cache, so the batch-scalar engine must reject where
+    page-granular admission keeps going.  Sim executors make the pair
+    bit-deterministic — the A/B isolates the admission unit."""
+    srv = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in PAGED_TENANTS),
+        executor="sim",
+        budget_mb=0.30,
+        batching=BatchingSpec(max_batch=8, window_ms=50.0,
+                              continuous=continuous)))
+    cfgs = {t.name: t.cfg for t in srv.tenants.values()}
+    trace, _ = poisson_trace(cfgs, requests_per_app=24, mean_iat_ms=1.0,
+                             seed=11, max_new=120)
+    stats = srv.engine.run_trace(trace)
+    srv.engine.check_event_invariant()
+    srv.close()
+    return stats
+
+
 def run() -> None:
     srv, stats, wall_s = _run_engine(prefetch=True)
     _, reactive, _ = _run_engine(prefetch=False)
@@ -198,6 +232,25 @@ def run() -> None:
          f"demand_loads={mig['demand_loads']} "
          f"off_demand_loads={mig_off['demand_loads']} "
          f"tight_chip={mig_led.budgets_mb[0]:.2f}MB")
+    # The paged A/B: request-unit admission against the page pool vs
+    # whole-batch scalar admission, same KV-contended sim trace.  The
+    # rejection row is the *reduction* (scalar − paged) so "strictly
+    # fewer rejections" gates one-sided; the warm row holds the paged
+    # engine to at least the scalar engine's warm ratio.
+    scalar = _run_paged(continuous=False)
+    paged = _run_paged(continuous=True)
+    emit("serving/paged/kv_rejections",
+         scalar["kv_rejections"] - paged["kv_rejections"],
+         f"scalar={scalar['kv_rejections']} "
+         f"paged={paged['kv_rejections']} "
+         f"paged_preemptions={paged['kv_preemptions']} "
+         f"pages={paged['kv_pages_total']}@"
+         f"{paged['kv_page_mb']:.4f}MB "
+         f"overrelease={paged['kv_overrelease_mb']:.4f}MB")
+    emit("serving/paged/warm_ratio", paged["warm_ratio"],
+         f"scalar={scalar['warm_ratio']:.3f} "
+         f"scalar_rejections={scalar['kv_rejections']} "
+         f"paged_rejections={paged['kv_rejections']}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

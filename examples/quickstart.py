@@ -20,6 +20,20 @@ config = ServingConfig(
                                  # ws-bfe, iws-bfe, batch-bfe, ...
     delta_ms=750.0,              # prediction-window half-width
     batching=BatchingSpec(max_batch=4, window_ms=20.0),
+                                 # BatchingSpec(continuous=True) makes
+                                 # the *request* the admission unit:
+                                 # each request charges page-rounded KV
+                                 # from a KVPagePool, joins/leaves the
+                                 # running decode batch per step, and
+                                 # frees its pages the step it retires;
+                                 # kv_page_mb sets the page size (0 =
+                                 # auto: largest tenant's 8-token
+                                 # cache).  Adds kv_page_mb/
+                                 # kv_pages_total/kv_pages_used/
+                                 # kv_preemptions to stats();
+                                 # kv_overrelease_mb counts release
+                                 # drift in either mode (0.0 when
+                                 # accounting is healthy).
     executor="sim",              # deterministic virtual service times
     loader=LoaderSpec(sharded=True, mesh_shape=(4,)),  # 4-way TP mesh:
                                  # weights shard per chip, loads stage

@@ -143,14 +143,33 @@ class CancelPrefetch:
 
 @dataclass(frozen=True)
 class ChargeKV:
+    """Charge a decode cache to ``app``.
+
+    Scalar form (``seq=None``): ``mb`` is a whole-batch charge, the
+    pre-paging accounting unit.  Page-granular form (``seq`` set, a
+    request id): when the state has a
+    :class:`~repro.core.memory_state.KVPagePool` installed, the charge
+    allocates fixed-size pages for that sequence — ``pages`` explicitly,
+    else ``ceil(mb / page_mb)`` — and the charged MB is the page-rounded
+    footprint.  Page allocation validates against the pool's free lists
+    (and per-device page capacity on a mesh) exactly like weight shards:
+    an unfundable allocation raises ``PlanError`` under simulate/apply.
+    """
     app: str
     mb: float
+    seq: Optional[int] = None
+    pages: Optional[int] = None
 
 
 @dataclass(frozen=True)
 class EvictKV:
+    """Return a retired decode cache.  Scalar form releases ``mb``;
+    page-granular form (``seq`` set) frees exactly the pages the pool
+    holds for that sequence, deriving the MB from the page table — so a
+    release can never drift from its charge."""
     app: str
     mb: float
+    seq: Optional[int] = None
 
 
 @dataclass(frozen=True)

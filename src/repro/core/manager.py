@@ -25,7 +25,8 @@ from repro.core import actions as A
 from repro.core.memory_state import INF, MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.core.policies import (DemandContext, FallbackPolicy, Policy,
-                                 PolicyLike, ProcurePlan, resolve_fallback,
+                                 PolicyLike, ProcurePlan,
+                                 kv_page_victim_plan, resolve_fallback,
                                  resolve_policy)
 
 # Inference time is load_ms/12 by default: the 8–17× load/infer asymmetry
@@ -106,6 +107,11 @@ class EdgeMultiAI:
         self.migrate = migrate
         self.records: List[InferenceRecord] = []
         self.kv_rejections = 0  # batches rejected for KV pressure
+        # Paged-KV preemption (continuous batching): sequences whose
+        # pages were evicted as victims of another tenant's admission.
+        # The engine drains ``take_preempted`` and requeues them.
+        self.kv_preemptions = 0
+        self._preempted: List[tuple] = []
         self._loader = loader  # real weight mover (serving runtime)
         # Admission-path migration observer (t_ms, app, mb): the serving
         # runtime wires this to the loader's event hook so MigrateShard
@@ -243,13 +249,39 @@ class EdgeMultiAI:
                     plan = ProcurePlan(app, t.zoo.smallest)
         return plan if plan is not None and plan.ok else None
 
-    def _desperate_evict(self, app: str, need_mb: float) -> None:
+    def _desperate_evict(self, app: str, need_mb: float, *,
+                         seq: Optional[int] = None,
+                         now: Optional[float] = None) -> None:
         """Enact the fallback policy's evictions for ``app``'s need —
-        built as one plan, applied all-or-nothing."""
-        if self.fallback is None:
+        built as one plan, applied all-or-nothing.  With a KV page pool
+        installed and a page-granular charge (``seq`` set), cold KV
+        pages join the victim class: whole-model evictions and other
+        sequences' page evictions compose into the *same* atomic plan,
+        and the preempted sequences are recorded for the engine to
+        requeue."""
+        evs = (self.fallback.plan(self.state, app, need_mb)
+               if self.fallback is not None else ())
+        acts: tuple = A.eviction_actions(evs)
+        pool = self.state.kv_pool
+        if pool is not None and seq is not None:
+            acts += kv_page_victim_plan(
+                self.state, app, need_mb=need_mb,
+                need_pages=pool.pages_for(need_mb),
+                extra_free_mb=sum(e.freed_mb for e in evs))
+        if not acts:
             return
-        self._apply_actions(A.eviction_actions(
-            self.fallback.plan(self.state, app, need_mb)))
+        self._apply_actions(acts, now=now)
+        for act in acts:
+            if isinstance(act, A.EvictKV) and act.seq is not None:
+                self.kv_preemptions += 1
+                self._preempted.append((act.app, act.seq))
+
+    def take_preempted(self) -> tuple:
+        """Drain the (app, seq) pairs evicted as page victims since the
+        last call — the engine requeues their requests."""
+        out = tuple(self._preempted)
+        self._preempted.clear()
+        return out
 
     def on_request(self, app: str, now: float) -> InferenceRecord:
         t = self.state.tenants[app]
@@ -312,8 +344,21 @@ class EdgeMultiAI:
     # KV-cache residency (serving runtime): batches charge their decode
     # caches against the same budget the eviction policies manage.
     # ------------------------------------------------------------------
+    def _kv_short(self, kv_mb: float, seq: Optional[int]) -> bool:
+        """Would charging ``kv_mb`` fail right now?  Global budget always;
+        with a page pool and a page-granular charge, the pool's free
+        pages must cover the rounded page count too (fragmentation the
+        scalar check cannot see)."""
+        if self.state.free_mb < kv_mb:
+            return True
+        pool = self.state.kv_pool
+        if pool is not None and seq is not None:
+            return pool.free_pages < pool.pages_for(kv_mb)
+        return False
+
     def admit_batch(self, app: str, now: float, kv_mb: float,
-                    demand_cold: bool = False) -> BatchAdmission:
+                    demand_cold: bool = False,
+                    seq: Optional[int] = None) -> BatchAdmission:
         """Admit one batch: ensure weights are resident (procuring if
         needed), then charge ``kv_mb`` of cache.  The KV need is staged as
         a pending planning charge during procurement so the policies pick
@@ -361,7 +406,7 @@ class EdgeMultiAI:
                 self.kv_rejections += 1
             return BatchAdmission(app, now, 0.0, rec.warm, True, None,
                                   kv_rejected=kv_rej)
-        if self.state.free_mb < kv_mb and self.policy is not None:
+        if self._kv_short(kv_mb, seq) and self.policy is not None:
             self._apply_actions(A.eviction_actions(
                 self.policy.plan_headroom(self.state, app, now, kv_mb,
                                           delta=self.delta_for(app),
@@ -423,11 +468,13 @@ class EdgeMultiAI:
             rec.accuracy, rec.latency_ms = 0.0, math.inf
             return BatchAdmission(app, now, 0.0, False, True, None,
                                   self_downgraded, kv_rejected=False)
-        if self.state.free_mb < kv_mb and self.policy is not None:
+        if self._kv_short(kv_mb, seq) and self.policy is not None:
             # Desperation: rejecting the batch is the worst outcome, so
-            # the window/history protections yield before the cache does.
-            self._desperate_evict(app, kv_mb)
-        if self.state.free_mb < kv_mb:
+            # the window/history protections yield before the cache does
+            # — and, page-granular, other tenants' cold KV pages join
+            # the victim class in the same plan.
+            self._desperate_evict(app, kv_mb, seq=seq, now=now)
+        if self._kv_short(kv_mb, seq):
             self.kv_rejections += 1
             # The inference never executes: retract the success record
             # on_request logged so Metrics agree with the engine (a
@@ -449,13 +496,25 @@ class EdgeMultiAI:
             rec.warm = False
             rec.latency_ms = (final.load_ms
                               + final.load_ms / LOAD_OVER_INFER)
-        self._apply_actions((A.ChargeKV(app, kv_mb),))
+        try:
+            self._apply_actions((A.ChargeKV(app, kv_mb, seq=seq),))
+        except A.PlanError:
+            # Page-granular only: the scalar checks passed but the pool
+            # could not fund the rounded page count (e.g. a concurrent
+            # holder).  A counted rejection, never an invariant assert.
+            self.kv_rejections += 1
+            rec.warm, rec.failed, rec.bits = False, True, None
+            rec.accuracy, rec.latency_ms = 0.0, math.inf
+            return BatchAdmission(app, now, 0.0, False, True, None,
+                                  self_downgraded, kv_rejected=True)
         return BatchAdmission(app, now, kv_mb, rec.warm, False,
                               final.bits, self_downgraded)
 
-    def release_kv(self, app: str, kv_mb: float) -> None:
-        """A batch retired: return its cache memory to the pool."""
-        self._apply_actions((A.EvictKV(app, kv_mb),))
+    def release_kv(self, app: str, kv_mb: float,
+                   seq: Optional[int] = None) -> None:
+        """A batch retired: return its cache memory to the pool.  With a
+        ``seq``, the page pool frees exactly that sequence's pages."""
+        self._apply_actions((A.EvictKV(app, kv_mb, seq=seq),))
 
     # ------------------------------------------------------------------
     def metrics(self) -> "Metrics":

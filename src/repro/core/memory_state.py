@@ -31,6 +31,159 @@ from repro.core.model_zoo import ModelVariant, ModelZoo
 INF = math.inf
 
 
+class KVPagePool:
+    """Fixed-size KV pages with per-tenant, per-sequence page tables.
+
+    The pool makes the KV cache a first-class paged resource: a sequence
+    charges ``ceil(need / page_mb)`` pages at admission and frees exactly
+    those pages at retirement, so the accounting unit is the request, not
+    the batch, and a release can never drift from its charge.  Page ids
+    are partitioned across devices (``device_pages[d]`` pages own a
+    contiguous id range), so on a mesh an allocation validates per-chip
+    page capacity the same way weight shards validate per-chip budgets —
+    through :meth:`MemoryState.simulate` / :meth:`MemoryState.apply`,
+    which snapshot and restore the pool alongside the ledger.
+
+    Allocation is deterministic: pages come from the device with the most
+    free pages (ties to the lowest device), lowest free id first, so two
+    identical schedules produce identical page tables.
+    """
+
+    def __init__(self, page_mb: float, n_pages: Optional[int] = None, *,
+                 device_pages: Optional[Tuple[int, ...]] = None):
+        if page_mb <= 0:
+            raise ValueError(f"bad page size: {page_mb}MB")
+        if device_pages is None:
+            if n_pages is None or n_pages <= 0:
+                raise ValueError(f"bad page count: {n_pages}")
+            device_pages = (int(n_pages),)
+        if any(p < 0 for p in device_pages):
+            raise ValueError(f"bad device page counts: {device_pages}")
+        self.page_mb = float(page_mb)
+        self.device_pages = tuple(int(p) for p in device_pages)
+        self.n_devices = len(self.device_pages)
+        starts, off = [], 0
+        for p in self.device_pages:
+            starts.append(off)
+            off += p
+        self._starts = tuple(starts)
+        # Sorted free-page ids per device (ascending: lowest id first).
+        self.free: List[List[int]] = [
+            list(range(s, s + p))
+            for s, p in zip(self._starts, self.device_pages)]
+        # app -> seq (request id) -> allocated page ids.
+        self.tables: Dict[str, Dict[int, Tuple[int, ...]]] = {}
+        # Monotone allocation stamps: victim selection preempts the
+        # youngest sequence first (least decode progress lost).
+        self._stamp = 0
+        self._stamps: Dict[Tuple[str, int], int] = {}
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def n_pages(self) -> int:
+        return sum(self.device_pages)
+
+    @property
+    def free_pages(self) -> int:
+        return sum(len(f) for f in self.free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - self.free_pages
+
+    def pages_for(self, mb: float) -> int:
+        """Pages needed to hold ``mb`` (page-rounded, never zero for a
+        positive need)."""
+        if mb <= 0:
+            return 0
+        return max(1, int(math.ceil(mb / self.page_mb - 1e-9)))
+
+    def device_of(self, pid: int) -> int:
+        for d in range(self.n_devices - 1, -1, -1):
+            if pid >= self._starts[d]:
+                return d
+        raise ValueError(f"bad page id {pid}")
+
+    def held_pages(self, app: str) -> int:
+        return sum(len(p) for p in self.tables.get(app, {}).values())
+
+    def seq_pages(self, app: str, seq: int) -> Tuple[int, ...]:
+        return self.tables.get(app, {}).get(seq, ())
+
+    def victim_seqs(self, exclude: str = "") -> List[Tuple[str, int, int]]:
+        """Preemption candidates ``(app, seq, n_pages)``, youngest
+        allocation first, excluding the requester's own sequences."""
+        out = [(stamp, app, seq)
+               for (app, seq), stamp in self._stamps.items()
+               if app != exclude]
+        out.sort(reverse=True)
+        return [(app, seq, len(self.tables[app][seq]))
+                for _, app, seq in out]
+
+    # -- mutations -------------------------------------------------------
+    def allocate(self, app: str, seq: int, n: int) -> Tuple[int, ...]:
+        """Allocate ``n`` pages for ``(app, seq)``; raises
+        :class:`~repro.core.actions.PlanError` when the pool cannot fund
+        them (a full pool is a planning decision, like a full chip)."""
+        if n <= 0:
+            raise A.PlanError(f"bad page allocation for {app}/{seq}: {n}")
+        if seq in self.tables.get(app, {}):
+            raise A.PlanError(f"sequence {app}/{seq} already holds pages")
+        if self.free_pages < n:
+            raise A.PlanError(
+                f"KV pool exhausted: {app}/{seq} needs {n} pages, "
+                f"{self.free_pages} free of {self.n_pages}")
+        got: List[int] = []
+        for _ in range(n):
+            d = max(range(self.n_devices), key=lambda i: len(self.free[i]))
+            got.append(self.free[d].pop(0))
+        self.tables.setdefault(app, {})[seq] = tuple(got)
+        self._stamps[(app, seq)] = self._stamp
+        self._stamp += 1
+        return tuple(got)
+
+    def release(self, app: str, seq: int) -> int:
+        """Free a sequence's pages; returns the page count (0 when the
+        pool holds nothing for it — the caller accounts the drift)."""
+        pages = self.tables.get(app, {}).pop(seq, ())
+        if not self.tables.get(app):
+            self.tables.pop(app, None)
+        self._stamps.pop((app, seq), None)
+        for pid in pages:
+            d = self.device_of(pid)
+            self.free[d].append(pid)
+            self.free[d].sort()
+        return len(pages)
+
+    def release_app(self, app: str) -> int:
+        """Crash-release every sequence a tenant holds (a failed batch
+        must not leak pages)."""
+        total = 0
+        for seq in tuple(self.tables.get(app, {})):
+            total += self.release(app, seq)
+        return total
+
+    def check_invariant(self) -> None:
+        held = sum(self.held_pages(a) for a in self.tables)
+        if held + self.free_pages != self.n_pages:
+            raise AssertionError(
+                f"page conservation violated: {held} held + "
+                f"{self.free_pages} free != {self.n_pages} total")
+
+    # -- transactional support ------------------------------------------
+    def _snapshot(self) -> Tuple[Any, ...]:
+        return ([list(f) for f in self.free],
+                {a: dict(t) for a, t in self.tables.items()},
+                self._stamp, dict(self._stamps))
+
+    def _restore(self, snap: Tuple[Any, ...]) -> None:
+        free, tables, stamp, stamps = snap
+        self.free = [list(f) for f in free]
+        self.tables = {a: dict(t) for a, t in tables.items()}
+        self._stamp = stamp
+        self._stamps = dict(stamps)
+
+
 class DeviceLedger:
     """Per-device memory accounting for a sharded (multi-chip) mesh.
 
@@ -45,9 +198,11 @@ class DeviceLedger:
     enacted by *any* caller (policies, desperation, admission) stay in
     sync without those callers knowing devices exist.
 
-    Per-device budgets bound weights + in-flight claims; KV caches remain
-    a global charge (decode caches follow their own ``cache_specs`` and
-    the serving budget already carries explicit KV headroom).
+    Per-device budgets bound weights + in-flight claims; KV caches are a
+    global charge against the ``MemoryState`` budget, with per-chip page
+    *placement* tracked by the :class:`KVPagePool` when one is installed
+    (the pool partitions its page ids across devices, so page-granular
+    ``ChargeKV`` validates per-chip capacity like a shard claim).
     """
 
     def __init__(self, budgets_mb: Tuple[float, ...],
@@ -231,6 +386,21 @@ class MemoryState:
     # chip mid-downgrade — per-device limits are enforced at reservation
     # time (sharded loader) and at admission resolution (manager).
     devices: Optional[DeviceLedger] = None
+    # Paged KV accounting (None = scalar KV charges).  When installed,
+    # ChargeKV/EvictKV actions carrying a ``seq`` allocate and free
+    # fixed-size pages through the pool; the MB charge stays on the
+    # tenant so the global invariant is unchanged.
+    kv_pool: Optional[KVPagePool] = None
+    # Clamped over-release drift (satellite of the paging work): MB that
+    # EvictKV/release_kv tried to return beyond what the tenant held.
+    # Counted always; raises when ``strict_kv`` is set so accounting
+    # drift fails tests instead of vanishing into the clamp.
+    kv_overrelease_mb: float = 0.0
+    strict_kv: bool = False
+    # Audit hook: called as on_audit(kind, app, mb) when drift is
+    # clamped (suppressed during simulate, which always rolls back).
+    on_audit: Optional[Callable[[str, str, float], None]] = None
+    _simulating: bool = field(default=False, repr=False)
 
     @property
     def weights_mb(self) -> float:
@@ -268,6 +438,12 @@ class MemoryState:
                 f"memory invariant violated: {self.used_mb:.1f}MB used "
                 f"+ {self.inflight_mb:.1f}MB in-flight "
                 f"> {self.budget_mb:.1f}MB budget")
+        if self.strict_kv and self.kv_overrelease_mb > 1e-9:
+            raise AssertionError(
+                f"KV accounting drift: {self.kv_overrelease_mb:.3f}MB "
+                f"over-released (strict_kv)")
+        if self.kv_pool is not None:
+            self.kv_pool.check_invariant()
 
     # -- mutations (the manager calls these after a policy decision) -------
     def load(self, app: str, variant: Optional[ModelVariant]) -> None:
@@ -286,8 +462,23 @@ class MemoryState:
         self.check_invariant()
 
     def release_kv(self, app: str, mb: float) -> None:
-        """Return a retired batch's KV memory to the pool."""
+        """Return a retired batch's KV memory to the pool.  Over-release
+        (more MB than the tenant holds) is clamped but *counted* in
+        ``kv_overrelease_mb`` — and raises under ``strict_kv`` — so KV
+        accounting drift surfaces instead of silently vanishing."""
+        self._drain_kv(app, mb)
+
+    def _drain_kv(self, app: str, mb: float) -> None:
         t = self.tenants[app]
+        over = mb - t.kv_mb
+        if over > 1e-9:
+            self.kv_overrelease_mb += over
+            if self.on_audit is not None and not self._simulating:
+                self.on_audit("kv_overrelease", app, over)
+            if self.strict_kv:
+                raise AssertionError(
+                    f"KV over-release: {app} returning {mb:.3f}MB while "
+                    f"holding {t.kv_mb:.3f}MB ({over:.3f}MB drift)")
         t.kv_mb = max(0.0, t.kv_mb - mb)
 
     def reserve_inflight(self, app: str, mb: float) -> None:
@@ -356,10 +547,11 @@ class MemoryState:
             dev = ({a: tuple(w) for a, w in self.devices.weights.items()},
                    {a: list(c) for a, c in self.devices.inflight.items()},
                    self.devices.shards_migrated)
-        return tenants, self.pending_mb, dev
+        pool = self.kv_pool._snapshot() if self.kv_pool is not None else None
+        return tenants, self.pending_mb, dev, pool, self.kv_overrelease_mb
 
     def _restore(self, snap: Tuple[Any, ...]) -> None:
-        tenants, pending, dev = snap
+        tenants, pending, dev, pool, overrelease = snap
         for a, (loaded, kv, inflight) in tenants.items():
             t = self.tenants[a]
             t.loaded, t.kv_mb, t.inflight_mb = loaded, kv, inflight
@@ -369,6 +561,9 @@ class MemoryState:
             self.devices.weights = dict(weights)
             self.devices.inflight = {a: list(c) for a, c in inflight.items()}
             self.devices.shards_migrated = migrated
+        if pool is not None:
+            self.kv_pool._restore(pool)
+        self.kv_overrelease_mb = overrelease
 
     def simulate(self, plan: "A.ResidencyPlan") -> Optional[str]:
         """Validate a plan without mutating: returns None when every
@@ -377,6 +572,7 @@ class MemoryState:
         the *same* per-action code as :meth:`apply` against a snapshot,
         so a plan that simulates clean is guaranteed to apply."""
         snap = self._snapshot()
+        self._simulating = True
         try:
             for act in plan:
                 self._apply_action(act)
@@ -384,6 +580,7 @@ class MemoryState:
         except A.PlanError as e:
             return str(e)
         finally:
+            self._simulating = False
             self._restore(snap)
 
     def apply(self, plan: "A.ResidencyPlan") -> "A.ResidencyPlan":
@@ -465,13 +662,29 @@ class MemoryState:
         elif isinstance(act, A.ChargeKV):
             if act.mb < 0:
                 raise A.PlanError(f"negative KV reservation: {act.mb}")
-            t.kv_mb += act.mb
+            if self.kv_pool is not None and act.seq is not None:
+                # Page-granular: allocate fixed-size pages for the
+                # sequence (validated against the pool's free lists, per
+                # device) and charge the page-rounded footprint.
+                n = (act.pages if act.pages is not None
+                     else self.kv_pool.pages_for(act.mb))
+                self.kv_pool.allocate(act.app, act.seq, n)
+                t.kv_mb += n * self.kv_pool.page_mb
+            else:
+                t.kv_mb += act.mb
             try:
                 self.check_invariant()
             except AssertionError as e:
                 raise A.PlanError(str(e)) from None
         elif isinstance(act, A.EvictKV):
-            t.kv_mb = max(0.0, t.kv_mb - act.mb)
+            try:
+                if self.kv_pool is not None and act.seq is not None:
+                    freed = self.kv_pool.release(act.app, act.seq)
+                    self._drain_kv(act.app, freed * self.kv_pool.page_mb)
+                else:
+                    self._drain_kv(act.app, act.mb)
+            except AssertionError as e:
+                raise A.PlanError(str(e)) from None
         elif isinstance(act, A.MigrateShard):
             if self.devices is None:
                 raise A.PlanError("MigrateShard without a DeviceLedger")

@@ -667,6 +667,45 @@ def kv_desperation_plan(state: MemoryState, app: str,
     return tuple(evictions)
 
 
+def kv_page_victim_plan(state: MemoryState, app: str, *,
+                        need_mb: float, need_pages: int,
+                        extra_free_mb: float = 0.0
+                        ) -> Tuple["A.EvictKV", ...]:
+    """Cold-KV-pages as a victim class: free *other* tenants' sequences'
+    pages until ``app``'s charge is fundable — both in MB (the global
+    budget) and in pages (the pool's free lists).  Victims are whole
+    sequences, youngest allocation first: the sequence with the least
+    decode progress loses the least work when the engine requeues it.
+
+    ``extra_free_mb`` is headroom the caller's *same plan* will free
+    before these evictions apply (weight downgrades/unloads), so the two
+    victim classes compose into one atomic
+    :class:`~repro.core.actions.ResidencyPlan`.  Returns ``()`` when the
+    pool cannot cover the shortfall — preempting sequences that still
+    would not admit the requester is pure thrash.
+    """
+    pool = state.kv_pool
+    if pool is None:
+        return ()
+    acts: List[A.EvictKV] = []
+    freed_pages = 0
+
+    def covered() -> bool:
+        free_mb = (state.free_mb + extra_free_mb
+                   + freed_pages * pool.page_mb)
+        free_pages = pool.free_pages + freed_pages
+        return free_mb >= need_mb - 1e-9 and free_pages >= need_pages
+
+    for vapp, seq, pages in pool.victim_seqs(exclude=app):
+        if covered():
+            break
+        acts.append(A.EvictKV(vapp, pages * pool.page_mb, seq=seq))
+        freed_pages += pages
+    if not covered():
+        return ()
+    return tuple(acts)
+
+
 # ---------------------------------------------------------------------------
 # Composable fallback: what backstops a policy when its plan is unfundable
 # ---------------------------------------------------------------------------

@@ -126,3 +126,122 @@ def decode_attention(
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, kt, vt)
     return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: the KV cache lives in a shared page pool instead of one
+# contiguous (B, T, ...) buffer, and each sequence names its pages through
+# a page table.  Same online-softmax body — the only change is *where*
+# each KV block comes from: the k/v index maps gather through the
+# scalar-prefetched table, so block ``t`` of sequence ``b`` reads physical
+# page ``page_table[b, t]``.  Blocks past a sequence's valid length are
+# masked exactly like the dense kernel's padded tail, so table entries
+# beyond the last real page may point anywhere valid (tests use page 0).
+# ---------------------------------------------------------------------------
+def _paged_decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, **kw):
+    # The table ref is consumed by the BlockSpec index maps; the body is
+    # the dense online-softmax pass over whatever block landed in VMEM.
+    del table_ref
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, **kw)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pages: jnp.ndarray,  # (P, KV, page_size, D) — shared physical pool
+    v_pages: jnp.ndarray,  # (P, KV, page_size, D)
+    page_table: jnp.ndarray,  # (B, NP) int32 — logical block -> page id
+    lengths: jnp.ndarray,  # (B,) int32 — valid tokens per sequence
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = 0.0,
+    prefix: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, KV, ps, _ = k_pages.shape
+    NP = page_table.shape[1]
+    G = H // KV
+    if scale == 0.0:
+        scale = D ** -0.5
+    qg = q.reshape(B, KV, G, D)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, bt=ps, nt=NP, scale=scale, window=window,
+        softcap=softcap, prefix=prefix)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # page_table, lengths
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, t, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, t, tab, lens: (tab[b, t], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, t, tab, lens: (tab[b, t], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, t, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qg,
+      k_pages, v_pages)
+    return out.reshape(B, H, D)
+
+
+def paginate_kv(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                lengths: jnp.ndarray, page_size: int, *,
+                permute: bool = True):
+    """Scatter a dense (B, T, KV, D) cache into a shared page pool.
+
+    Test/bridge helper: returns ``(k_pages, v_pages, page_table)`` with
+    pages laid out ``(P, KV, page_size, D)``.  With ``permute=True`` the
+    physical page order is a deterministic non-identity permutation
+    (stride walk), so kernel tests actually exercise the gather instead
+    of reading pages in logical order.  Unused table entries point at
+    page 0 (masked by ``lengths`` in the kernel)."""
+    import numpy as np
+
+    B, T, KV, D = k_cache.shape
+    NP = math.ceil(T / page_size)
+    Tp = NP * page_size
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad)
+        v_cache = jnp.pad(v_cache, pad)
+    # (B, NP, ps, KV, D) -> (B*NP, KV, ps, D): logical page (b, t) sits at
+    # physical slot b*NP + t before permutation.
+    k_lin = jnp.moveaxis(
+        k_cache.reshape(B, NP, page_size, KV, D), 3, 2
+    ).reshape(B * NP, KV, page_size, D)
+    v_lin = jnp.moveaxis(
+        v_cache.reshape(B, NP, page_size, KV, D), 3, 2
+    ).reshape(B * NP, KV, page_size, D)
+    P = B * NP
+    if permute and P > 1:
+        stride = max(2, P // 3) | 1  # odd -> coprime walk when P is 2^k
+        while math.gcd(stride, P) != 1:
+            stride += 2
+        perm = np.arange(P) * stride % P  # perm[logical] = physical
+    else:
+        perm = np.arange(P)
+    inv = np.empty(P, np.int64)
+    inv[perm] = np.arange(P)
+    k_pages = k_lin[inv]  # physical slot p holds logical page perm^-1...
+    v_pages = v_lin[inv]
+    table = perm.reshape(B, NP)
+    # Entries past each sequence's last valid page -> page 0.
+    lens = np.asarray(lengths)
+    used = np.ceil(np.maximum(lens, 1) / page_size).astype(np.int64)
+    col = np.arange(NP)[None, :]
+    table = np.where(col < used[:, None], table, 0)
+    return k_pages, v_pages, jnp.asarray(table, jnp.int32)

@@ -69,6 +69,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *, window=0, softcap=0.0,
         scale=scale, prefix=prefix)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           window=0, softcap=0.0, scale=0.0, prefix=0,
+                           impl="auto"):
+    if resolve_impl(impl) == "pallas":
+        from . import decode_attention as da
+
+        return da.paged_decode_attention(
+            q, k_pages, v_pages, page_table, lengths, window=window,
+            softcap=softcap, scale=scale, prefix=prefix,
+            interpret=_interpret())
+    return ref.paged_decode_attention(
+        q, k_pages, v_pages, page_table, lengths, window=window,
+        softcap=softcap, scale=scale, prefix=prefix)
+
+
 def quant_matmul(x, w_q, scales, *, out_dtype=None, impl="auto"):
     if resolve_impl(impl) == "pallas":
         from . import quant_matmul as qm

@@ -98,6 +98,30 @@ def decode_attention(
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_decode_attention(
+    q: jnp.ndarray,  # (B, H, D)
+    k_pages: jnp.ndarray,  # (P, KV, page_size, D)
+    v_pages: jnp.ndarray,  # (P, KV, page_size, D)
+    page_table: jnp.ndarray,  # (B, NP) int32
+    lengths: jnp.ndarray,  # (B,) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float = 0.0,
+    prefix: int = 0,
+) -> jnp.ndarray:
+    """Oracle for the paged kernel: gather each sequence's pages back
+    into a dense cache, then run the dense oracle.  Table entries past
+    ``lengths`` may point anywhere (they are masked)."""
+    B, NP = page_table.shape
+    _, KV, ps, D = k_pages.shape
+    # (B, NP, KV, ps, D) -> (B, NP, ps, KV, D) -> (B, NP*ps, KV, D)
+    k = jnp.swapaxes(k_pages[page_table], 2, 3).reshape(B, NP * ps, KV, D)
+    v = jnp.swapaxes(v_pages[page_table], 2, 3).reshape(B, NP * ps, KV, D)
+    return decode_attention(q, k, v, lengths, window=window,
+                            softcap=softcap, scale=scale, prefix=prefix)
+
+
 # ---------------------------------------------------------------------------
 # quant_matmul: activation @ dequantize(w_q, scales).
 # Weights are stored int8 (int4 values occupy int8 storage in [-8, 7];

@@ -82,8 +82,18 @@ class PredictorSpec:
 
 @dataclass(frozen=True)
 class BatchingSpec:
+    """``continuous=True`` switches the engine to continuous batching:
+    the request (not the batch) is the admission unit — each request
+    charges its own page-rounded KV need against a
+    :class:`~repro.core.memory_state.KVPagePool`, joins the running
+    decode batch per step, and frees its pages the step it retires.
+    ``kv_page_mb`` is the page size knob (0 = auto: the largest
+    tenant's 8-token decode cache); smaller pages waste less memory per
+    request, larger pages keep the page tables shorter."""
     max_batch: int = 8
     window_ms: float = 0.0
+    continuous: bool = False
+    kv_page_mb: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -277,6 +287,8 @@ def build_server(config: ServingConfig, cls=None):
               straggler_deadline_s=config.straggler_deadline_s,
               max_batch=config.batching.max_batch,
               batch_window_ms=config.batching.window_ms,
+              continuous=config.batching.continuous,
+              kv_page_mb=config.batching.kv_page_mb,
               prefetch=config.loader.prefetch,
               sharded_mesh=(config.loader.mesh_shape
                             if config.loader.sharded else None),

@@ -9,12 +9,10 @@ from __future__ import annotations
 
 import itertools
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
-
-_ids = itertools.count()
 
 
 @dataclass
@@ -23,7 +21,10 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new: int = 8
     arrival_ms: float = 0.0
-    rid: int = field(default_factory=lambda: next(_ids))
+    # Assigned by the Batcher at submit (a module-global counter here
+    # leaked ids across server builds in one process, making the FIFO
+    # rid tie-break in next_batch non-reproducible between builds).
+    rid: Optional[int] = None
 
 
 @dataclass
@@ -39,9 +40,18 @@ class Batcher:
         self.queues: Dict[str, List[Request]] = defaultdict(list)
         self.max_batch = max_batch
         self.pad_id = pad_id
+        # Instance-scoped so two server builds in one process each start
+        # at rid 0: identical traces get identical tie-break orders.
+        self._ids = itertools.count()
+
+    def assign(self, req: Request) -> Request:
+        """Give a request its id (idempotent: explicit rids survive)."""
+        if req.rid is None:
+            req.rid = next(self._ids)
+        return req
 
     def submit(self, req: Request) -> None:
-        self.queues[req.app].append(req)
+        self.queues[req.app].append(self.assign(req))
 
     def pending(self) -> int:
         return sum(len(q) for q in self.queues.values())

@@ -45,7 +45,7 @@ import jax
 import numpy as np
 
 from repro.core import actions as RA
-from repro.core.manager import BatchAdmission
+from repro.core.manager import LOAD_OVER_INFER, BatchAdmission
 from repro.core.policies import DemandContext, ProcurePlan
 from repro.core.simulator import Workload, generate_workload
 from repro.models import transformer as T
@@ -180,6 +180,26 @@ class EngineEvent:
 
 Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
 
+# One full-batch service span covers the default request's decode budget
+# (max_new=8), so a single continuous-batching decode step is the
+# variant's service time divided by this.
+STEPS_PER_SERVICE = 8.0
+
+
+@dataclass(eq=False)
+class _ActiveSeq:
+    """One request mid-decode in the continuous batch: its admission
+    outcome, its page-rounded KV charge, and its step progress.
+    ``eq=False``: membership and removal are by identity — field
+    equality would ``==``-broadcast the request's ndarray prompt."""
+    req: Request
+    start_ms: float
+    warm: bool
+    bits: Optional[int]
+    kv_mb: float
+    batch_size: int  # active set size at admission (stats)
+    steps_done: int = 0
+
 
 class ServingEngine:
     """Pulls batches from the Batcher and drives them through the
@@ -196,15 +216,23 @@ class ServingEngine:
     def __init__(self, host: ServingHost, *, max_batch: int = 8,
                  batch_window_ms: float = 0.0,
                  executor: Optional[Executor] = None,
-                 loader: Optional[LoaderChannel] = None):
+                 loader: Optional[LoaderChannel] = None,
+                 continuous: bool = False):
         self.host = host
         self.batcher = Batcher(max_batch=max_batch)
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
+        # Continuous batching: the admission unit is the request, not the
+        # batch — requests join/leave the running decode per step and
+        # charge/free page-granular KV (requires a KVPagePool on the
+        # state; installed by EdgeServer.start when the BatchingSpec
+        # asks for it).
+        self.continuous = continuous
         self.results: List[RequestResult] = []
         self.events: List[EngineEvent] = []
         self.kv_downgrades = 0  # requester shrank itself to fit its cache
         self.weight_failures = 0  # batches whose weights were unprocurable
+        self._now = 0.0  # loop clock (audit events outside execute paths)
         # None => route through TenantExecutor.execute (the protocol
         # path); a callable overrides it (legacy injection point).
         self._executor = executor
@@ -245,6 +273,14 @@ class ServingEngine:
         """Mirror loader lifecycle transitions into the audit trail."""
         self._event(t_ms, kind, app, mb)
 
+    def _wire_audit(self) -> None:
+        """Route the state's KV over-release audit hook into the event
+        log (timing is loop-clock granular)."""
+        mgr = self.host.manager
+        if mgr is not None and mgr.state.on_audit is None:
+            mgr.state.on_audit = (
+                lambda kind, app, mb: self._event(self._now, kind, app, mb))
+
     def submit(self, req: Request, now_ms: float) -> None:
         """Enqueue a request; feeds the tenant's RNN arrival predictor."""
         req.arrival_ms = now_ms if req.arrival_ms == 0.0 else req.arrival_ms
@@ -275,6 +311,8 @@ class ServingEngine:
         """
         mgr = self.host.manager
         assert mgr is not None, "server.start() before engine use"
+        self._wire_audit()
+        self._now = now_ms
         tr = self.host.tenants[batch.app]
         total_len = batch.prompts.shape[1] + batch.max_new
         kv_mb = kv_cache_mb(tr.cfg, len(batch.requests), total_len)
@@ -349,14 +387,35 @@ class ServingEngine:
             raise
         service_ms = (virtual_ms if virtual_ms is not None
                       else (time.monotonic() - t0) * 1e3) + load_pen_ms
-        done_ms = now_ms + service_ms
-        mgr.release_kv(batch.app, adm.kv_mb)
-        self._event(done_ms, "retire", batch.app, -adm.kv_mb)
-        results = [
-            RequestResult(r.rid, batch.app, r.arrival_ms, now_ms, done_ms,
-                          adm.warm, False, adm.bits, len(batch.requests),
-                          adm.kv_mb)
-            for r in batch.requests]
+        # Per-request retirement: a short request finishes — and returns
+        # its share of the cache — when *its* decode budget is spent, not
+        # when the batch's longest request retires.  The decode itself
+        # still runs to batch.max_new (padding is compute); the memory
+        # charge does not.  Shares release in finish order; the longest
+        # request carries the float residue so the batch drains to
+        # exactly zero, and its release is the batch's "retire" event
+        # (earlier ones are "free_kv") so admits and retires stay 1:1
+        # in the audit trail.
+        B = len(batch.requests)
+        decode_ms = service_ms - load_pen_ms
+        order = sorted(range(B),
+                       key=lambda j: (batch.requests[j].max_new, j))
+        results: List[Optional[RequestResult]] = [None] * B
+        released = 0.0
+        for pos, j in enumerate(order):
+            r = batch.requests[j]
+            frac = r.max_new / batch.max_new if batch.max_new > 0 else 1.0
+            r_done = now_ms + load_pen_ms + decode_ms * frac
+            last = pos == B - 1
+            share = (max(0.0, adm.kv_mb - released) if last
+                     else adm.kv_mb / B)
+            released += share
+            mgr.release_kv(batch.app, share)
+            self._event(r_done, "retire" if last else "free_kv",
+                        batch.app, -share)
+            results[j] = RequestResult(
+                r.rid, batch.app, r.arrival_ms, now_ms, r_done,
+                adm.warm, False, adm.bits, B, share)
         self.results.extend(results)
         return results, service_ms, tokens
 
@@ -462,7 +521,14 @@ class ServingEngine:
         Without a loader this is the reactive PR-1 engine — every cold
         load happens synchronously inside the admit path and is charged
         to the loop clock, stalling every queued tenant behind it.
+
+        With ``continuous=True`` the batch-scalar loop is replaced by
+        :meth:`_run_continuous`: requests join and leave the running
+        decode batch per step against the paged KV pool.
         """
+        self._wire_audit()
+        if self.continuous:
+            return self._run_continuous(requests)
         pending = sorted(requests, key=lambda r: r.arrival_ms)
         i, n, now = 0, len(pending), 0.0
         while i < n or self.batcher.pending():
@@ -514,6 +580,167 @@ class ServingEngine:
             self._reap_loads(math.inf)
         return self.stats()
 
+    # ------------------------------------------------------------------
+    # Continuous batching: the request is the admission unit
+    # ------------------------------------------------------------------
+    def _step_ms(self, app: str, n_active: int) -> float:
+        """One decode step's virtual time for ``app``'s active set: the
+        loaded variant's service span over the nominal decode budget.
+        A tenant executor may override by exposing ``step_ms``."""
+        tr = self.host.tenants[app]
+        step = getattr(tr, "step_ms", None)
+        if callable(step):
+            return step(n_active)
+        loaded = self.host.manager.state.tenants[app].loaded
+        base = loaded.load_ms / LOAD_OVER_INFER if loaded else 1.0
+        return max(base / STEPS_PER_SERVICE, 1e-6)
+
+    def _requeue_preempted(self, active: Dict[str, List[_ActiveSeq]],
+                           now: float) -> None:
+        """Sequences whose pages were evicted as admission victims lose
+        their decode progress and go back to the head of their queue
+        (their pages are already freed by the manager's plan)."""
+        for vapp, seq in self.host.manager.take_preempted():
+            seqs = active.get(vapp, [])
+            victim = next((s for s in seqs if s.req.rid == seq), None)
+            if victim is None:
+                continue
+            seqs.remove(victim)
+            self._event(now, "preempt", vapp, -victim.kv_mb)
+            self.batcher.queues[vapp].insert(0, victim.req)
+
+    def _join_requests(self, active: Dict[str, List[_ActiveSeq]],
+                       now: float) -> float:
+        """Admit queued requests into the running decode batch, FIFO per
+        tenant, until each tenant's active set is full or an admission
+        fails.  Each request charges its own page-rounded KV need; a
+        rejected request is dropped and counted like a rejected batch.
+        Returns the (possibly advanced) loop clock — a synchronous cold
+        load inside an admit stalls the loop, exactly like the reactive
+        batch engine."""
+        mgr = self.host.manager
+        pool = mgr.state.kv_pool
+        inflight = self.loader.inflight if self.loader is not None else {}
+        for app in list(self.batcher.queued_apps()):
+            if app in inflight:
+                continue  # weights mid-staging: join after the commit
+            tr = self.host.tenants[app]
+            while (self.batcher.queues.get(app)
+                   and len(active.setdefault(app, [])) < self.max_batch):
+                req = self.batcher.queues[app][0]
+                raw = kv_cache_mb(tr.cfg, 1, len(req.prompt) + req.max_new)
+                need = (pool.pages_for(raw) * pool.page_mb
+                        if pool is not None else raw)
+                staged = (self.loader.peek_use(app)
+                          if self.loader is not None else None)
+                adm = mgr.admit_batch(
+                    app, now, need,
+                    demand_cold=staged.demand if staged is not None
+                    else False,
+                    seq=req.rid if pool is not None else None)
+                # Admission may have preempted other tenants' sequences
+                # (cold-page victims): drop them from the active sets
+                # and requeue before touching this queue further.
+                self._requeue_preempted(active, now)
+                if adm.self_downgraded:
+                    self.kv_downgrades += 1
+                if adm.failed:
+                    if staged is not None:
+                        self.loader.take_use(app, False)
+                    if not adm.kv_rejected:
+                        self.weight_failures += 1
+                    self.batcher.queues[app].pop(0)
+                    self._event(now, "reject", app, need)
+                    self.results.append(RequestResult(
+                        req.rid, app, req.arrival_ms, now, now, False,
+                        True, None, len(active[app]), 0.0))
+                    continue
+                if staged is not None:
+                    self.loader.take_use(app, adm.warm)
+                if not adm.warm and (self.loader is None
+                                     or staged is None):
+                    # Synchronous cold load inside the admit: the loop
+                    # clock pays for the transfer (reactive semantics).
+                    now += tr.zoo.by_bits(adm.bits).load_ms
+                self.batcher.queues[app].pop(0)
+                self._event(now, "admit", app, adm.kv_mb)
+                active[app].append(_ActiveSeq(
+                    req=req, start_ms=now, warm=adm.warm, bits=adm.bits,
+                    kv_mb=adm.kv_mb, batch_size=len(active[app]) + 1))
+            if not self.batcher.queues.get(app):
+                self.batcher.queues.pop(app, None)
+        return now
+
+    def _retire_seq(self, s: _ActiveSeq, now: float) -> None:
+        """A sequence finished its decode budget: free its pages *now*
+        (not when the batch's longest request retires — there is no
+        batch anymore) and record the result."""
+        mgr = self.host.manager
+        pool = mgr.state.kv_pool
+        mgr.release_kv(s.req.app, s.kv_mb,
+                       seq=s.req.rid if pool is not None else None)
+        self._event(now, "retire", s.req.app, -s.kv_mb)
+        self.results.append(RequestResult(
+            s.req.rid, s.req.app, s.req.arrival_ms, s.start_ms, now,
+            s.warm, False, s.bits, s.batch_size, s.kv_mb))
+
+    def _run_continuous(self, requests: Sequence[Request]) -> dict:
+        """Continuous-batching trace replay.  Per iteration: pump due
+        arrivals, run the loader maintenance hooks, join queued requests
+        into the active sets (request-granular admission against free KV
+        pages), then run ONE decode step for the tenant with the largest
+        active set — sequences whose budget is spent retire and free
+        their pages immediately, so the next join admits against the
+        reclaimed pages mid-"batch".  Virtual-time, deterministic."""
+        pending = sorted(requests, key=lambda r: r.arrival_ms)
+        i, n, now = 0, len(pending), 0.0
+        active: Dict[str, List[_ActiveSeq]] = {}
+        while (i < n or self.batcher.pending()
+               or any(active.values())):
+            self._now = now
+            while i < n and pending[i].arrival_ms <= now:
+                self.submit(pending[i], pending[i].arrival_ms)
+                i += 1
+            if self.loader is not None:
+                self._reap_loads(now)
+                self.host.predict_and_preload(now)
+                self._stage_demand_loads(now)
+            now = self._join_requests(active, now)
+            apps = [a for a in sorted(active) if active[a]]
+            if not apps:
+                # Nothing decoding: jump to the next arrival, the
+                # earliest load commit, or a prefetch trigger.
+                t_next = pending[i].arrival_ms if i < n else math.inf
+                if self.loader is not None:
+                    t_next = min(t_next, self.loader.earliest_ready(),
+                                 self.host.next_prefetch_trigger(now))
+                if t_next is math.inf:
+                    break
+                now = max(now, t_next)
+                continue
+            app = max(apps, key=lambda a: (
+                len(active[a]),
+                -min(s.start_ms for s in active[a]), a))
+            t0 = now
+            now += self._step_ms(app, len(active[app]))
+            self._spans.append((t0, now, app))
+            finished = []
+            for s in active[app]:
+                s.steps_done += 1
+                if s.steps_done >= s.req.max_new:
+                    finished.append(s)
+            if finished:
+                # Identity, not equality: _ActiveSeq carries the request
+                # (whose prompt is an ndarray — == broadcasts).
+                gone = {id(s) for s in finished}
+                active[app] = [s for s in active[app]
+                               if id(s) not in gone]
+                for s in finished:
+                    self._retire_seq(s, now)
+        if self.loader is not None:
+            self._reap_loads(math.inf)
+        return self.stats()
+
     async def run_async(self, requests: Sequence[Request]) -> dict:
         """Asyncio entry point: replays the trace off the event loop."""
         return await asyncio.to_thread(self.run_trace, requests)
@@ -522,13 +749,17 @@ class ServingEngine:
     def stats(self) -> dict:
         """Aggregate + per-tenant latency percentiles and throughput,
         plus the prefetch pipeline's hit/waste/overlap counters."""
-        tens = self.host.manager.state.tenants.values()
+        st = self.host.manager.state
+        tens = st.tenants.values()
         total_req = sum(t.requests for t in tens)
         out: dict = {
             "requests": len(self.results),
             "kv_downgrades": self.kv_downgrades,
             "kv_rejections": self.kv_rejections,
             "weight_failures": self.weight_failures,
+            # Clamped KV over-release drift (0.0 in a healthy run; the
+            # strict_kv flag turns any drift into a hard failure).
+            "kv_overrelease_mb": st.kv_overrelease_mb,
             # Fraction of batch admissions arriving inside a predicted
             # window (the manager's on_request unit — one count per
             # admitted batch, not per request) — the live measure of
@@ -550,11 +781,17 @@ class ServingEngine:
             shards = getattr(self.loader, "shards_landed", None)
             if shards is not None:
                 out["shards_landed"] = shards
-        devices = self.host.manager.state.devices
+        devices = st.devices
         if devices is not None:
             # Cross-device victim migrations (admission + loader paths;
             # the ledger counts them where the moves commit).
             out["shards_migrated"] = devices.shards_migrated
+        if st.kv_pool is not None:
+            out.update(
+                kv_page_mb=st.kv_pool.page_mb,
+                kv_pages_total=st.kv_pool.n_pages,
+                kv_pages_used=st.kv_pool.used_pages,
+                kv_preemptions=self.host.manager.kv_preemptions)
         if not self.results:
             out["warm_ratio"] = 0.0
             return out

@@ -170,7 +170,9 @@ class EdgeServer:
                  device_budget_mb: "Optional[float | Tuple[float, ...]]"
                  = None,
                  migrate: bool = True,
-                 adaptive_delta: bool = False):
+                 adaptive_delta: bool = False,
+                 continuous: bool = False,
+                 kv_page_mb: float = 0.0):
         self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
@@ -192,6 +194,12 @@ class EdgeServer:
                                  else device_budget_mb)
         self.migrate = migrate
         self.adaptive_delta = adaptive_delta
+        # Continuous batching: requests join/leave the running decode
+        # batch per step, and KV is charged page-granularly through a
+        # KVPagePool sized at start().  kv_page_mb=0 derives the page
+        # size from the largest tenant's 8-token decode cache.
+        self.continuous = continuous
+        self.kv_page_mb = kv_page_mb
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
@@ -284,9 +292,42 @@ class EdgeServer:
             self.manager.on_migrate = (
                 lambda t, app, mb: self.loader._emit(t, "migrate",
                                                      app, mb))
+        if self.continuous:
+            self._install_kv_pool()
         self.engine = ServingEngine(
             self, max_batch=self.max_batch,
-            batch_window_ms=self.batch_window_ms, loader=self.loader)
+            batch_window_ms=self.batch_window_ms, loader=self.loader,
+            continuous=self.continuous)
+
+    def _install_kv_pool(self) -> None:
+        """Size and attach the paged-KV pool for continuous batching.
+
+        Page size defaults to the largest tenant's 8-token decode cache
+        (so one page ~ one short burst of decoding for the heaviest
+        model); the whole budget is divided into pages because KV shares
+        the same ledger as weights — a page the pool holds is memory a
+        weight load cannot claim, and simulate/apply validates both the
+        same way.  Under a sharded mesh the pages are partitioned across
+        chips proportional to each chip's ledger budget."""
+        from repro.core.memory_state import KVPagePool
+        from repro.serving.engine import kv_cache_mb
+
+        page_mb = self.kv_page_mb or max(
+            kv_cache_mb(t.cfg, 1, 8) for t in self.tenants.values())
+        n_pages = int(self.budget_mb // page_mb)
+        if n_pages < 1:
+            raise ValueError(
+                f"kv_page_mb={page_mb:.1f} exceeds the whole budget "
+                f"({self.budget_mb:.1f} MB): no page fits")
+        dev = self.manager.state.devices
+        if dev is not None:
+            total = sum(dev.budgets_mb)
+            counts = [int(n_pages * b / total) for b in dev.budgets_mb]
+            counts[0] += n_pages - sum(counts)  # remainder to chip 0
+            self.manager.state.kv_pool = KVPagePool(
+                page_mb, device_pages=tuple(counts))
+        else:
+            self.manager.state.kv_pool = KVPagePool(page_mb, n_pages)
 
     def _device_ledger(self):
         """Per-device budgets + spec-derived shard splits for the mesh.
@@ -419,8 +460,9 @@ class EdgeServer:
                 app, np.zeros((0, max_new), np.int32), False, False,
                 tr.loaded_bits, 0.0))
         tr.predictor.observe_request(now_ms)
-        reqs = [Request(app=app, prompt=prompts[i], max_new=max_new,
-                        arrival_ms=now_ms) for i in range(len(prompts))]
+        reqs = [self.engine.batcher.assign(
+            Request(app=app, prompt=prompts[i], max_new=max_new,
+                    arrival_ms=now_ms)) for i in range(len(prompts))]
         batch = Batch(app, reqs, prompts, max_new)
         results, service_ms, toks = self.engine.execute_batch(
             batch, now_ms, extra=extra)
@@ -482,7 +524,9 @@ class EdgeServer:
         for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
                     "prefetch_shrunk", "demand_loads", "loads_committed",
                     "load_overlap_ms", "fits_scheduled", "shards_landed",
-                    "shards_migrated"):
+                    "shards_migrated", "kv_overrelease_mb",
+                    "kv_preemptions", "kv_page_mb", "kv_pages_total",
+                    "kv_pages_used"):
             if key in eng:
                 out[key] = eng[key]
         if self.adaptive_delta:

@@ -71,7 +71,10 @@ def test_kv_charged_during_execution_released_after(cfgs):
         one_batch(app, cfgs[app]), now_ms=0.0)
     assert toks is not None and not results[0].failed
     assert seen["kv_during"] == pytest.approx(kv_expect)
-    assert results[0].kv_mb == pytest.approx(kv_expect)
+    # Retirement is per request: each result carries its own share of
+    # the charge (equal max_new -> equal split), summing to the total.
+    assert sum(r.kv_mb for r in results) == pytest.approx(kv_expect)
+    assert results[0].kv_mb == pytest.approx(kv_expect / 2)
     assert srv.manager.state.kv_mb == 0.0, "released on retirement"
     assert srv.manager.state.tenants[app].kv_mb == 0.0
 
