@@ -63,6 +63,15 @@ the *same* trace:
   the A/B row — its detail carries the downgrade-only run's warm ratio,
   ``shards_migrated``, and both runs' prefetch-hit counts, showing
   migration admits loads the downgrade-only path shrank or failed.
+* **elastic** — the sharded sim engine under a mid-trace chip-loss/
+  recovery schedule (``FaultSpec``), A/B'd against the same trace with
+  no faults.  The dead chip is drained through one transactional
+  ``ResidencyPlan`` (shard migrations toward survivors, downgrades
+  where nothing fits, KV-page evictions + preemption for sequences
+  homed there) while the other tenants keep decoding, and recovery
+  rebalances shards back toward the canonical layout.
+  ``serving/elastic/warm_ratio`` must hold against the undisturbed
+  run's.
 
 Reports requests/sec and per-tenant p50/p95/p99 for the prefetch engine,
 plus the head-to-head ``serving/warm_ratio`` and the measured
@@ -77,8 +86,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.serving import poisson_trace
-from repro.serving.api import (BatchingSpec, EdgeServer, LoaderSpec,
-                               ServingConfig, TenantSpec)
+from repro.serving.api import (BatchingSpec, EdgeServer, FaultSpec,
+                               LoaderSpec, ServingConfig, TenantSpec)
 
 TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b"]
 PROMPT_LEN = 8
@@ -124,7 +133,9 @@ def _run_engine(prefetch: bool, policy: str = "bfe",
     wall_s = time.monotonic() - t0
     srv.engine.check_event_invariant()
     srv.close()
-    return srv, stats, wall_s
+    # ServingStats.to_dict() is the benchmark-facing flattening: the
+    # emit details below index the historical keys.
+    return srv, stats.to_dict(), wall_s
 
 
 def _skewed_budgets(srv: EdgeServer, n: int = 8, tight: float = 0.7,
@@ -166,7 +177,33 @@ def _run_paged(continuous: bool):
     stats = srv.engine.run_trace(trace)
     srv.engine.check_event_invariant()
     srv.close()
-    return stats
+    return stats.to_dict()
+
+
+def _run_elastic(fault):
+    """One sim-executor run of the elastic trace on a 4-chip ledgered
+    mesh.  With ``fault`` set, chip 3 dies mid-trace (drained through one
+    transactional ResidencyPlan while the other tenants keep decoding)
+    and comes back later (shards rebalanced toward the canonical
+    layout); with ``fault=None`` the same trace runs undisturbed.  Sim
+    executors make the pair bit-deterministic, so the A/B isolates what
+    the loss/recovery cycle costs."""
+    srv = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in PAGED_TENANTS),
+        executor="sim",
+        policy="iws-bfe",
+        delta_ms=750.0,
+        batching=BatchingSpec(max_batch=4, window_ms=20.0),
+        loader=LoaderSpec(sharded=True, mesh_shape=(4,)),
+        kv_headroom_shape=(2, 12),
+        fault=fault))
+    cfgs = {t.name: t.cfg for t in srv.tenants.values()}
+    trace, _ = poisson_trace(cfgs, requests_per_app=30, mean_iat_ms=400.0,
+                             seed=7)
+    stats = srv.engine.run_trace(trace)
+    srv.engine.check_event_invariant()
+    srv.close()
+    return stats.to_dict()
 
 
 def run() -> None:
@@ -251,6 +288,21 @@ def run() -> None:
          f"scalar={scalar['warm_ratio']:.3f} "
          f"scalar_rejections={scalar['kv_rejections']} "
          f"paged_rejections={paged['kv_rejections']}")
+    # The elastic A/B: same trace, same 4-chip sim mesh, fault schedule
+    # on vs off.  Chip 3 is drained mid-trace and recovered later; the
+    # warm ratio must hold against the undisturbed run (the drain plan
+    # rehomes shards instead of cold-starting tenants) and the detail
+    # carries the loss/recovery counters.
+    faulted = _run_elastic(FaultSpec(
+        events=((3000.0, 3, "down"), (9000.0, 3, "up"))))
+    clean = _run_elastic(None)
+    emit("serving/elastic/warm_ratio", faulted["warm_ratio"],
+         f"no_fault={clean['warm_ratio']:.3f} "
+         f"chips_lost={faulted['chips_lost']} "
+         f"chips_recovered={faulted['chips_recovered']} "
+         f"drain_migrations={faulted['drain_migrations']} "
+         f"drain_downgrades={faulted['drain_downgrades']} "
+         f"kv_rejections={faulted['kv_rejections']}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

@@ -49,24 +49,25 @@ print(f"trace: {len(trace)} requests over {wl.horizon_ms / 1e3:.1f}s "
 stats = server.engine.run_trace(trace)
 server.engine.check_event_invariant()
 
+# Each engine event normalizes to a typed AuditEvent (kind, t, app,
+# detail) — `ev.audit` — whose __str__ is the canonical log line.
 for ev in server.engine.events:
     if ev.kind in ("admit", "reject", "prefetch", "demand", "load",
                    "cancel"):
-        print(f"[{ev.t_ms:8.0f}ms] {ev.kind:8s} {ev.app:16s} "
-              f"kv={ev.kv_mb:6.3f}MB used={ev.used_mb:5.2f}MB "
+        print(f"{ev.audit} used={ev.used_mb:5.2f}MB "
               f"inflight={ev.inflight_mb:5.2f}MB free={ev.free_mb:5.2f}MB")
 
-print(f"\nthroughput: {stats.get('requests_per_sec', 0.0):.2f} req/s   "
-      f"kv_rejections={stats['kv_rejections']} "
-      f"kv_downgrades={stats['kv_downgrades']}")
-print(f"prefetch pipeline: hits={stats['prefetch_hits']} "
-      f"wasted={stats['prefetch_wasted']} "
-      f"demand_loads={stats['demand_loads']} "
-      f"loads_committed={stats['loads_committed']} "
-      f"load_overlap={stats['load_overlap_ms']:.1f}ms")
-print(f"predictors: window_hit_rate={stats['prediction_hit_rate']:.2f} "
-      f"background_fits_scheduled={stats['fits_scheduled']}")
-for app, s in stats["per_tenant"].items():
+print(f"\nthroughput: {stats.requests_per_sec or 0.0:.2f} req/s   "
+      f"kv_rejections={stats.kv_rejections} "
+      f"kv_downgrades={stats.kv_downgrades}")
+print(f"prefetch pipeline: hits={stats.prefetch_hits} "
+      f"wasted={stats.prefetch_wasted} "
+      f"demand_loads={stats.demand_loads} "
+      f"loads_committed={stats.loads_committed} "
+      f"load_overlap={stats.load_overlap_ms:.1f}ms")
+print(f"predictors: window_hit_rate={stats.prediction_hit_rate:.2f} "
+      f"background_fits_scheduled={stats.fits_scheduled}")
+for app, s in stats.per_tenant.items():
     print(f"  {app:16s} n={s['requests']:3d} warm={s['warm_ratio']:.2f} "
           f"fail={s['fail_ratio']:.2f} p50={s['p50_ms']:7.0f}ms "
           f"p95={s['p95_ms']:7.0f}ms p99={s['p99_ms']:7.0f}ms "

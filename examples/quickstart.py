@@ -39,6 +39,23 @@ config = ServingConfig(
                                  # weights shard per chip, loads stage
                                  # per shard, budgets ledger per device
     kv_headroom_shape=(2, 12),   # budget headroom for a (2, 12) cache
+    # fault=FaultSpec(events=((2000.0, 3, "down"), (6000.0, 3, "up")))
+    #                              # elastic mesh: schedule chip loss and
+    #                              # recovery on the engine clock.  A
+    #                              # "down" event drains chip 3 through
+    #                              # one transactional ResidencyPlan
+    #                              # (shard migrations toward surviving
+    #                              # chips, downgrades where nothing
+    #                              # fits, KV-page evictions + sequence
+    #                              # preemption for pages homed there)
+    #                              # while other tenants keep decoding;
+    #                              # "up" rebalances shards back toward
+    #                              # the canonical layout.  Requires
+    #                              # LoaderSpec(sharded=True); adds
+    #                              # chips_lost/chips_recovered/
+    #                              # drain_migrations/drain_downgrades
+    #                              # to stats() and chip_down/chip_up/
+    #                              # drain events to the audit trail.
 )                                # budget_mb=None -> derived contention
 
 server = EdgeServer.build(config)          # register + wire + start
@@ -52,12 +69,17 @@ print(f"budget {server.budget_mb:.2f} MB "
 cfgs = {t.name: t.cfg for t in server.tenants.values()}
 trace, _ = poisson_trace(cfgs, requests_per_app=20, mean_iat_ms=400.0,
                          seed=0)
+# run_trace returns a frozen ServingStats: core fields (requests,
+# warm_ratio, kv_* counters, per_tenant percentiles) are always set;
+# subsystem blocks (loader pipeline, mesh, paged KV, elastic) are None
+# until that subsystem is attached.  stats.to_dict() flattens to the
+# historical dict, dropping the unset blocks.
 stats = server.engine.run_trace(trace)
 server.engine.check_event_invariant()      # budget held at every event
 server.close()
 
-print(f"{stats['requests']} requests: warm={stats['warm_ratio']:.0%} "
-      f"prefetch_hits={stats['prefetch_hits']} "
-      f"demand_loads={stats['demand_loads']} "
-      f"shards_landed={stats['shards_landed']} "
-      f"prediction_hit_rate={stats['prediction_hit_rate']:.0%}")
+print(f"{stats.requests} requests: warm={stats.warm_ratio:.0%} "
+      f"prefetch_hits={stats.prefetch_hits} "
+      f"demand_loads={stats.demand_loads} "
+      f"shards_landed={stats.shards_landed} "
+      f"prediction_hit_rate={stats.prediction_hit_rate:.0%}")

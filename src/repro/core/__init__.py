@@ -14,7 +14,7 @@ from repro.core.manager import (BatchAdmission, EdgeMultiAI,
                                 InferenceRecord, Metrics)
 from repro.core.memory_state import MemoryState, TenantState
 from repro.core.model_zoo import ModelVariant, ModelZoo, zoo_from_config
-from repro.core.policies import (POLICIES, BatchAware, DemandContext,
+from repro.core.policies import (BatchAware, DemandContext,
                                  DesperationFallback, FallbackPolicy,
                                  Policy, ProcurePlan, available_policies,
                                  kv_headroom_plan, register_policy,
@@ -30,7 +30,7 @@ __all__ = [
     "ChargeKV", "EvictKV", "MigrateShard", "ResidencyPlan", "PlanError",
     "Eviction", "plan_of", "plan_migration", "procure_actions",
     "eviction_actions", "staged_load_action",
-    "zoo_from_config", "POLICIES", "ProcurePlan", "kv_headroom_plan",
+    "zoo_from_config", "ProcurePlan", "kv_headroom_plan",
     "Policy", "BatchAware", "DemandContext", "DesperationFallback",
     "FallbackPolicy", "available_policies", "register_policy",
     "resolve_policy",

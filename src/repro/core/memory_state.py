@@ -77,6 +77,10 @@ class KVPagePool:
         # youngest sequence first (least decode progress lost).
         self._stamp = 0
         self._stamps: Dict[Tuple[str, int], int] = {}
+        # Free pages of offline devices (chip loss): stashed out of the
+        # allocatable lists until the device is restored, so a page
+        # freed on a dead chip never funds a new allocation there.
+        self._offline_free: Dict[int, List[int]] = {}
 
     # -- queries ---------------------------------------------------------
     @property
@@ -109,6 +113,17 @@ class KVPagePool:
 
     def seq_pages(self, app: str, seq: int) -> Tuple[int, ...]:
         return self.tables.get(app, {}).get(seq, ())
+
+    def seqs_on_device(self, device: int) -> List[Tuple[str, int]]:
+        """Sequences holding at least one page on ``device`` (sorted for
+        determinism) — the chip-loss drain planner's eviction set."""
+        out = []
+        for app in sorted(self.tables):
+            for seq in sorted(self.tables[app]):
+                if any(self.device_of(p) == device
+                       for p in self.tables[app][seq]):
+                    out.append((app, seq))
+        return out
 
     def victim_seqs(self, exclude: str = "") -> List[Tuple[str, int, int]]:
         """Preemption candidates ``(app, seq, n_pages)``, youngest
@@ -151,8 +166,10 @@ class KVPagePool:
         self._stamps.pop((app, seq), None)
         for pid in pages:
             d = self.device_of(pid)
-            self.free[d].append(pid)
-            self.free[d].sort()
+            dest = (self._offline_free[d] if d in self._offline_free
+                    else self.free[d])
+            dest.append(pid)
+            dest.sort()
         return len(pages)
 
     def release_app(self, app: str) -> int:
@@ -163,25 +180,47 @@ class KVPagePool:
             total += self.release(app, seq)
         return total
 
+    # -- elastic mesh ----------------------------------------------------
+    def offline_device(self, device: int) -> None:
+        """Chip loss: pull the device's free pages out of the allocatable
+        lists.  Pages still *held* on the chip stay in their tables — the
+        drain planner evicts those sequences, and :meth:`release` routes
+        their pages into the offline stash instead of back into play."""
+        if device in self._offline_free:
+            return
+        self._offline_free[device] = sorted(self.free[device])
+        self.free[device] = []
+
+    def restore_device(self, device: int) -> None:
+        """Chip recovery: the stashed pages become allocatable again."""
+        stash = self._offline_free.pop(device, None)
+        if stash is None:
+            return
+        self.free[device] = sorted(self.free[device] + stash)
+
     def check_invariant(self) -> None:
         held = sum(self.held_pages(a) for a in self.tables)
-        if held + self.free_pages != self.n_pages:
+        offline = sum(len(f) for f in self._offline_free.values())
+        if held + self.free_pages + offline != self.n_pages:
             raise AssertionError(
                 f"page conservation violated: {held} held + "
-                f"{self.free_pages} free != {self.n_pages} total")
+                f"{self.free_pages} free + {offline} offline "
+                f"!= {self.n_pages} total")
 
     # -- transactional support ------------------------------------------
     def _snapshot(self) -> Tuple[Any, ...]:
         return ([list(f) for f in self.free],
                 {a: dict(t) for a, t in self.tables.items()},
-                self._stamp, dict(self._stamps))
+                self._stamp, dict(self._stamps),
+                {d: list(f) for d, f in self._offline_free.items()})
 
     def _restore(self, snap: Tuple[Any, ...]) -> None:
-        free, tables, stamp, stamps = snap
+        free, tables, stamp, stamps, offline = snap
         self.free = [list(f) for f in free]
         self.tables = {a: dict(t) for a, t in tables.items()}
         self._stamp = stamp
         self._stamps = dict(stamps)
+        self._offline_free = {d: list(f) for d, f in offline.items()}
 
 
 class DeviceLedger:
@@ -219,6 +258,9 @@ class DeviceLedger:
         self.inflight: Dict[str, List[float]] = {}
         # Shards moved between chips by MigrateShard actions (stats).
         self.shards_migrated = 0
+        # Original budgets of offline chips (chip loss): budget drops to
+        # zero while the chip is down, restored verbatim on recovery.
+        self._offline: Dict[int, float] = {}
 
     # -- queries ---------------------------------------------------------
     def split(self, app: str, variant: Optional[ModelVariant]
@@ -343,6 +385,32 @@ class DeviceLedger:
         cur[dst] += mb
         self.weights[app] = tuple(cur)
         self.shards_migrated += 1
+
+    # -- elastic mesh ----------------------------------------------------
+    @property
+    def offline_devices(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._offline))
+
+    def offline(self, device: int) -> None:
+        """Chip loss: the device's budget drops to zero.  Weights and
+        claims still homed there are now over budget — the caller (the
+        elastic drain planner) owes one plan that vacates them before the
+        next :meth:`check_invariant`."""
+        if device in self._offline:
+            return
+        budgets = list(self.budgets_mb)
+        self._offline[device] = budgets[device]
+        budgets[device] = 0.0
+        self.budgets_mb = tuple(budgets)
+
+    def online(self, device: int) -> None:
+        """Chip recovery: restore the original budget verbatim."""
+        orig = self._offline.pop(device, None)
+        if orig is None:
+            return
+        budgets = list(self.budgets_mb)
+        budgets[device] = orig
+        self.budgets_mb = tuple(budgets)
 
     def check_invariant(self) -> None:
         for d in range(self.n_devices):
@@ -546,7 +614,9 @@ class MemoryState:
         if self.devices is not None:
             dev = ({a: tuple(w) for a, w in self.devices.weights.items()},
                    {a: list(c) for a, c in self.devices.inflight.items()},
-                   self.devices.shards_migrated)
+                   self.devices.shards_migrated,
+                   self.devices.budgets_mb,
+                   dict(self.devices._offline))
         pool = self.kv_pool._snapshot() if self.kv_pool is not None else None
         return tenants, self.pending_mb, dev, pool, self.kv_overrelease_mb
 
@@ -557,10 +627,12 @@ class MemoryState:
             t.loaded, t.kv_mb, t.inflight_mb = loaded, kv, inflight
         self.pending_mb = pending
         if dev is not None:
-            weights, inflight, migrated = dev
+            weights, inflight, migrated, budgets, offline = dev
             self.devices.weights = dict(weights)
             self.devices.inflight = {a: list(c) for a, c in inflight.items()}
             self.devices.shards_migrated = migrated
+            self.devices.budgets_mb = budgets
+            self.devices._offline = dict(offline)
         if pool is not None:
             self.kv_pool._restore(pool)
         self.kv_overrelease_mb = overrelease

@@ -25,15 +25,13 @@ the paper precisely:
 Policies are consumed through the class-based :class:`Policy` protocol
 (``plan_procure`` / ``plan_prefetch`` / ``plan_demand`` / ``victim_filter``
 hooks) and the ``@register_policy`` registry; new policies plug in without
-touching the manager (see :class:`BatchAware` for the first plugin).  The
-bare functions (``lfe``/``bfe``/``ws_bfe``/``iws_bfe``) and the
-string-keyed ``POLICIES`` dict survive only as deprecation shims over the
-registered classes.
+touching the manager (see :class:`BatchAware` for the first plugin).
+Resolve a policy by its paper name with :func:`resolve_policy` and
+enumerate what is registered with :func:`available_policies`.
 """
 from __future__ import annotations
 
 import heapq
-import warnings
 from dataclasses import dataclass
 from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Union
 
@@ -517,64 +515,6 @@ class CostBFE(BFE):
             if score > best_score + 1e-12:
                 best, best_score = plan, score
         return best if best is not None else ProcurePlan(app, None)
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shims: the bare-function POLICIES dict (pre-registry API)
-# ---------------------------------------------------------------------------
-def _warn_shim(name: str) -> None:
-    warnings.warn(
-        f"repro.core.policies.{name} is a deprecated shim; resolve "
-        f"policies through resolve_policy()/register_policy() instead",
-        DeprecationWarning, stacklevel=3)
-
-
-def lfe(state: MemoryState, app: str, now: float, *, delta: float,
-        history: float = 0.0) -> ProcurePlan:
-    _warn_shim("lfe")
-    return LFE().plan_procure(state, app, now, delta=delta, history=history)
-
-
-def bfe(state: MemoryState, app: str, now: float, *, delta: float,
-        history: float = 0.0) -> ProcurePlan:
-    _warn_shim("bfe")
-    return BFE().plan_procure(state, app, now, delta=delta, history=history)
-
-
-def ws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
-           history: float = 0.0) -> ProcurePlan:
-    _warn_shim("ws_bfe")
-    return WSBFE().plan_procure(state, app, now, delta=delta,
-                                history=history)
-
-
-def iws_bfe(state: MemoryState, app: str, now: float, *, delta: float,
-            history: float) -> ProcurePlan:
-    _warn_shim("iws_bfe")
-    return IWSBFE().plan_procure(state, app, now, delta=delta,
-                                 history=history)
-
-
-class _DeprecatedPolicies(dict):
-    """Legacy string-keyed view of the four paper policies.  Lookups warn:
-    callers should resolve through ``resolve_policy`` so plugins
-    participate too.  (Iteration/membership stay silent — enumerating
-    what exists is not the same as using the pre-registry API.)"""
-
-    def __getitem__(self, key):
-        warnings.warn(
-            "the POLICIES dict is a deprecated shim; use "
-            "resolve_policy()/available_policies() instead",
-            DeprecationWarning, stacklevel=2)
-        return super().__getitem__(key)
-
-
-POLICIES: Dict[str, Callable[..., ProcurePlan]] = _DeprecatedPolicies({
-    "lfe": lfe,
-    "bfe": bfe,
-    "ws-bfe": ws_bfe,
-    "iws-bfe": iws_bfe,
-})
 
 
 # ---------------------------------------------------------------------------

@@ -86,7 +86,7 @@ def main() -> None:
                       f"{'warm' if r.warm else 'COLD'}"
                       f"{' FAIL' if r.failed else ''} bits={r.bits} "
                       f"lat={r.latency_s * 1e3:.0f}ms")
-    print("\nstats:", server.stats())
+    print("\nstats:", server.stats().to_dict())
     server.close()
 
 

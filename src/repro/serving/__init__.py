@@ -1,22 +1,23 @@
-from repro.serving.api import (BatchingSpec, LoaderSpec, PredictorSpec,
-                               ServingConfig, SimTenant, TenantSpec,
-                               build_server)
+from repro.serving.api import (BatchingSpec, FaultSpec, LoaderSpec,
+                               PredictorSpec, ServingConfig, SimTenant,
+                               TenantSpec, build_server)
 from repro.serving.batcher import Batch, Batcher, Request
 from repro.serving.engine import (EngineEvent, LoaderChannel, RequestResult,
                                   ServingEngine, ServingHost, TenantExecutor,
                                   kv_cache_mb, poisson_trace,
                                   trace_from_workload)
 from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
-from repro.serving.server import (EdgeServer, MultiTenantServer, ServeResult,
-                                  TenantRuntime)
+from repro.serving.server import EdgeServer, ServeResult, TenantRuntime
 from repro.serving.sharded_loader import (ShardedInflightLoad,
                                           ShardedLoaderChannel, ShardStage)
+from repro.serving.stats import AuditEvent, EventKind, ServingStats
 
-__all__ = ["Batch", "Batcher", "Request", "EdgeServer", "MultiTenantServer",
+__all__ = ["Batch", "Batcher", "Request", "EdgeServer",
            "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
            "EngineEvent", "kv_cache_mb", "poisson_trace",
            "trace_from_workload", "BackgroundLoader", "InflightLoad",
            "LoadRecord", "ServingConfig", "TenantSpec", "PredictorSpec",
-           "BatchingSpec", "LoaderSpec", "SimTenant", "build_server",
+           "BatchingSpec", "LoaderSpec", "FaultSpec", "SimTenant",
+           "build_server", "ServingStats", "AuditEvent", "EventKind",
            "ServingHost", "TenantExecutor", "LoaderChannel",
            "ShardedLoaderChannel", "ShardedInflightLoad", "ShardStage"]

@@ -36,10 +36,13 @@ from repro.core.model_zoo import ModelVariant, zoo_from_config
 from repro.core.policies import Policy, resolve_policy
 from repro.core.predictor import RequestPredictor
 from repro.models.config import ModelConfig
+from repro.serving.elastic import FaultSpec
 from repro.serving.server import EdgeServer
+from repro.serving.stats import AuditEvent, EventKind, ServingStats
 
 __all__ = ["EdgeServer", "ServingConfig", "TenantSpec", "PredictorSpec",
-           "BatchingSpec", "LoaderSpec", "SimTenant", "build_server"]
+           "BatchingSpec", "LoaderSpec", "FaultSpec", "SimTenant",
+           "ServingStats", "AuditEvent", "EventKind", "build_server"]
 
 
 # ---------------------------------------------------------------------------
@@ -174,10 +177,20 @@ class ServingConfig:
     predictor: PredictorSpec = field(default_factory=PredictorSpec)
     executor: str = "real"  # "real" | "sim"
     straggler_deadline_s: float = 30.0
+    # Chip-fault schedule (elastic mesh): chip-down/chip-up events on the
+    # engine clock, each down firing one transactional drain plan.
+    # Requires LoaderSpec(sharded=True) — the drain planner works the
+    # per-device ledger.
+    fault: Optional[FaultSpec] = None
 
     def __post_init__(self):
         if not self.tenants:
             raise ValueError("ServingConfig needs at least one TenantSpec")
+        if self.fault is not None and not self.loader.sharded:
+            raise ValueError(
+                "ServingConfig(fault=...) requires "
+                "LoaderSpec(sharded=True) — chip faults drain a device "
+                "ledger")
         names = [t.name for t in self.tenants]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names in {names}")
@@ -221,7 +234,8 @@ class ServingConfig:
             for t in d["tenants"])
         for key, spec_cls in (("batching", BatchingSpec),
                               ("loader", LoaderSpec),
-                              ("predictor", PredictorSpec)):
+                              ("predictor", PredictorSpec),
+                              ("fault", FaultSpec)):
             if key in d and isinstance(d[key], dict):
                 d[key] = spec_cls(**d[key])
         if d.get("kv_headroom_shape") is not None:
@@ -293,7 +307,8 @@ def build_server(config: ServingConfig, cls=None):
               sharded_mesh=(config.loader.mesh_shape
                             if config.loader.sharded else None),
               device_budget_mb=config.loader.device_budget_mb,
-              migrate=config.loader.migrate)
+              migrate=config.loader.migrate,
+              fault=config.fault)
     ps = config.predictor
     for spec in config.tenants:
         from repro.configs import get_config

@@ -26,7 +26,7 @@ The engine is written against three structural protocols rather than the
 concrete serving classes: :class:`ServingHost` (what it needs from the
 tenant registry/facade), :class:`TenantExecutor` (one tenant's config,
 zoo, predictor, and execution), and :class:`LoaderChannel` (the
-background staging pipeline).  ``MultiTenantServer``/``TenantRuntime``/
+background staging pipeline).  ``EdgeServer``/``TenantRuntime``/
 ``BackgroundLoader`` are the production implementations; the sim-time
 executor (``repro.serving.api.SimTenant``) drops in for deterministic
 tests with zero XLA.
@@ -51,6 +51,7 @@ from repro.core.simulator import Workload, generate_workload
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving.batcher import Batch, Batcher, Request
+from repro.serving.stats import AuditEvent, EventKind, ServingStats
 
 MB = 1024 * 1024
 
@@ -165,9 +166,7 @@ class EngineEvent:
     budget_mb`` at every point in the run, not just at the end — and,
     on a sharded mesh, per-device ``weights + claims ≤ chip budget``."""
     t_ms: float
-    # submit | admit | reject | retire | prefetch | demand | load |
-    # cancel | shrink | migrate
-    kind: str
+    kind: EventKind
     app: str
     kv_mb: float
     used_mb: float
@@ -176,6 +175,15 @@ class EngineEvent:
     # Per-device weights + in-flight claims when a DeviceLedger is
     # installed (sharded mesh); None on single-device runs.
     device_mb: Optional[Tuple[float, ...]] = None
+    # Per-device budgets *at event time*: chip loss/recovery changes the
+    # ledger mid-run, so the invariant check compares each event against
+    # the budgets that held when it fired, not today's.
+    device_budget_mb: Optional[Tuple[float, ...]] = None
+
+    @property
+    def audit(self) -> AuditEvent:
+        """The normalized audit record (kind/time/tenant/MB delta)."""
+        return AuditEvent(self.kind, self.t_ms, self.app, self.kv_mb)
 
 
 Executor = Callable[[Any, Batch, Optional[dict]], np.ndarray]
@@ -242,10 +250,19 @@ class ServingEngine:
         self.loader = loader
         if loader is not None:
             loader.on_event = self._loader_event
+        # Elastic mesh controller (chip loss & recovery); installed by
+        # EdgeServer.start when the config carries a FaultSpec.  Polled
+        # in the maintenance pass and folded into the idle wake-up.
+        self.elastic = None
         # Execution spans (start, end, app) inside the current loader
         # window — used to measure how much of each load was hidden
         # behind other tenants' prefill/decode.
         self._spans: List[Tuple[float, float, str]] = []
+
+    @property
+    def audit_trail(self) -> List[AuditEvent]:
+        """Every event as a normalized :class:`AuditEvent` record."""
+        return [ev.audit for ev in self.events]
 
     @property
     def server(self) -> ServingHost:
@@ -263,10 +280,12 @@ class ServingEngine:
     def _event(self, t_ms: float, kind: str, app: str, kv_mb: float) -> None:
         st = self.host.manager.state
         self.events.append(EngineEvent(
-            t_ms, kind, app, kv_mb, st.used_mb, st.free_mb,
+            t_ms, EventKind(kind), app, kv_mb, st.used_mb, st.free_mb,
             st.inflight_mb,
             device_mb=(st.devices.device_used()
-                       if st.devices is not None else None)))
+                       if st.devices is not None else None),
+            device_budget_mb=(st.devices.budgets_mb
+                              if st.devices is not None else None)))
 
     def _loader_event(self, t_ms: float, kind: str, app: str,
                       mb: float) -> None:
@@ -514,7 +533,7 @@ class ServingEngine:
         short and another arrival is imminent.
 
         With a background loader attached (the default via
-        ``MultiTenantServer``), no weight transfer ever blocks the loop:
+        ``EdgeServer``), no weight transfer ever blocks the loop:
         predicted-next tenants are prefetched ahead of their requests,
         cold tenants' demand loads stage while other tenants execute,
         and a tenant is only deferred until its own load commits.
@@ -540,6 +559,10 @@ class ServingEngine:
                     # either would turn a hideable load into a stall.
                     t_next = min(t_next, self.loader.earliest_ready(),
                                  self.host.next_prefetch_trigger(now))
+                if self.elastic is not None:
+                    # A scheduled chip fault wakes the loop even when it
+                    # is otherwise idle — drains fire at their instant.
+                    t_next = min(t_next, self.elastic.next_event_ms())
                 now = max(now, t_next)
             while i < n and pending[i].arrival_ms <= now:
                 self.submit(pending[i], pending[i].arrival_ms)
@@ -551,6 +574,9 @@ class ServingEngine:
                 continue
             if self.loader is not None:
                 self._reap_loads(now)
+                if self.elastic is not None:
+                    self._now = now
+                    self.elastic.poll(now)
                 self.host.predict_and_preload(now)
                 self._stage_demand_loads(now)
                 batch = self.batcher.next_batch(
@@ -563,6 +589,9 @@ class ServingEngine:
                     t_next = self.loader.earliest_ready()
                     if i < n:
                         t_next = min(t_next, pending[i].arrival_ms)
+                    if self.elastic is not None:
+                        t_next = min(t_next,
+                                     self.elastic.next_event_ms())
                     if t_next is not math.inf:
                         now = max(now, t_next)
                         continue
@@ -703,6 +732,9 @@ class ServingEngine:
                 i += 1
             if self.loader is not None:
                 self._reap_loads(now)
+                if self.elastic is not None:
+                    self.elastic.poll(now)
+                    self._requeue_preempted(active, now)
                 self.host.predict_and_preload(now)
                 self._stage_demand_loads(now)
             now = self._join_requests(active, now)
@@ -714,6 +746,8 @@ class ServingEngine:
                 if self.loader is not None:
                     t_next = min(t_next, self.loader.earliest_ready(),
                                  self.host.next_prefetch_trigger(now))
+                if self.elastic is not None:
+                    t_next = min(t_next, self.elastic.next_event_ms())
                 if t_next is math.inf:
                     break
                 now = max(now, t_next)
@@ -746,13 +780,16 @@ class ServingEngine:
         return await asyncio.to_thread(self.run_trace, requests)
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
+    def stats(self) -> ServingStats:
         """Aggregate + per-tenant latency percentiles and throughput,
-        plus the prefetch pipeline's hit/waste/overlap counters."""
+        plus the prefetch pipeline's hit/waste/overlap counters, as a
+        typed :class:`~repro.serving.stats.ServingStats` (fields of
+        unattached subsystems stay ``None`` and drop out of
+        ``to_dict()``)."""
         st = self.host.manager.state
         tens = st.tenants.values()
         total_req = sum(t.requests for t in tens)
-        out: dict = {
+        kw: dict = {
             "requests": len(self.results),
             "kv_downgrades": self.kv_downgrades,
             "kv_rejections": self.kv_rejections,
@@ -768,9 +805,10 @@ class ServingEngine:
                 sum(t.requests - t.unexpected for t in tens) / total_req
                 if total_req else 0.0),
             "per_tenant": {},
+            "warm_ratio": 0.0,
         }
         if self.loader is not None:
-            out.update(
+            kw.update(
                 prefetch_hits=self.loader.prefetch_hits,
                 prefetch_wasted=self.loader.prefetch_wasted,
                 prefetch_shrunk=self.loader.prefetch_shrunk,
@@ -780,26 +818,31 @@ class ServingEngine:
                 fits_scheduled=self.loader.fits_scheduled)
             shards = getattr(self.loader, "shards_landed", None)
             if shards is not None:
-                out["shards_landed"] = shards
+                kw["shards_landed"] = shards
         devices = st.devices
         if devices is not None:
             # Cross-device victim migrations (admission + loader paths;
             # the ledger counts them where the moves commit).
-            out["shards_migrated"] = devices.shards_migrated
+            kw["shards_migrated"] = devices.shards_migrated
         if st.kv_pool is not None:
-            out.update(
+            kw.update(
                 kv_page_mb=st.kv_pool.page_mb,
                 kv_pages_total=st.kv_pool.n_pages,
                 kv_pages_used=st.kv_pool.used_pages,
                 kv_preemptions=self.host.manager.kv_preemptions)
+        if self.elastic is not None:
+            kw.update(
+                chips_lost=self.elastic.chips_lost,
+                chips_recovered=self.elastic.chips_recovered,
+                drain_migrations=self.elastic.drain_migrations,
+                drain_downgrades=self.elastic.drain_downgrades)
         if not self.results:
-            out["warm_ratio"] = 0.0
-            return out
-        out["warm_ratio"] = (sum(r.warm for r in self.results)
-                             / len(self.results))
+            return ServingStats(**kw)
+        kw["warm_ratio"] = (sum(r.warm for r in self.results)
+                            / len(self.results))
         span_ms = (max(r.done_ms for r in self.results)
                    - min(r.arrival_ms for r in self.results))
-        out["requests_per_sec"] = (
+        kw["requests_per_sec"] = (
             len(self.results) / (span_ms / 1e3) if span_ms > 0 else 0.0)
         for app in sorted({r.app for r in self.results}):
             rs = [r for r in self.results if r.app == app]
@@ -812,7 +855,7 @@ class ServingEngine:
                             "p99_ms": float("inf")})
             t_span = (max(r.done_ms for r in rs)
                       - min(r.arrival_ms for r in rs))
-            out["per_tenant"][app] = {
+            kw["per_tenant"][app] = {
                 "requests": len(rs),
                 "warm_ratio": sum(r.warm for r in rs) / len(rs),
                 "fail_ratio": sum(r.failed for r in rs) / len(rs),
@@ -821,17 +864,17 @@ class ServingEngine:
                                    if t_span > 0 else 0.0),
                 **lat,
             }
-        return out
+        return ServingStats(**kw)
 
     def check_event_invariant(self, budget_mb: Optional[float] = None
                               ) -> None:
         """Every recorded event must respect the memory budget —
         committed memory *and* in-flight background-load claims; on a
         sharded mesh, every chip's weights + shard claims must respect
-        its per-device budget too."""
+        the per-device budget *that held at event time* (chip loss and
+        recovery change the ledger mid-run)."""
         budget = (budget_mb if budget_mb is not None
                   else self.host.manager.state.budget_mb)
-        ledger = self.host.manager.state.devices
         for ev in self.events:
             if ev.used_mb + ev.inflight_mb > budget + 1e-6:
                 raise AssertionError(
@@ -839,14 +882,14 @@ class ServingEngine:
                     f"({ev.kind} {ev.app}): {ev.used_mb:.2f}MB "
                     f"+ {ev.inflight_mb:.2f}MB in-flight "
                     f"> {budget:.2f}MB")
-            if ev.device_mb is None or ledger is None:
+            if ev.device_mb is None or ev.device_budget_mb is None:
                 continue
             for d, mb in enumerate(ev.device_mb):
-                if mb > ledger.budgets_mb[d] + 1e-6:
+                if mb > ev.device_budget_mb[d] + 1e-6:
                     raise AssertionError(
                         f"device {d} over budget at t={ev.t_ms:.1f}ms "
                         f"({ev.kind} {ev.app}): {mb:.2f}MB "
-                        f"> {ledger.budgets_mb[d]:.2f}MB")
+                        f"> {ev.device_budget_mb[d]:.2f}MB")
 
 
 # ---------------------------------------------------------------------------

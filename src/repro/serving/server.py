@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import functools
 import time
-import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -100,6 +99,43 @@ class TenantRuntime:
         self.loaded_bits: Optional[int] = None
         self.predictor = predictor or RequestPredictor(context=8, hidden=16)
         self._decode = None  # jitted per (bits)
+        # Physical placement (sharded mesh): when a mesh is attached,
+        # set_variant device_puts each leaf with a NamedSharding from
+        # the real partition specs, so per-chip buffer bytes track the
+        # DeviceLedger's shard fractions.  None = single-device asarray.
+        self.mesh = None
+        self._specs: Dict[int, Any] = {}  # per-bits PartitionSpec trees
+
+    def attach_mesh(self, mesh) -> None:
+        """Route weight placement through ``jax.device_put`` +
+        ``NamedSharding`` on ``mesh``; a variant already resident is
+        re-placed so its buffers match the specs immediately."""
+        self.mesh = mesh
+        self._specs.clear()
+        if self.loaded_bits is not None:
+            bits, self.loaded_bits = self.loaded_bits, None
+            self.set_variant(self.zoo.by_bits(bits))
+
+    def _spec_tree(self, bits: int):
+        specs = self._specs.get(bits)
+        if specs is None:
+            from repro.distributed import sharding as SH
+            specs = SH.param_specs(self.cfg, self.host[bits], self.mesh,
+                                   fsdp=False)
+            self._specs[bits] = specs
+        return specs
+
+    def reshard_device_params(self) -> None:
+        """Elastic recovery: re-place the resident variant's buffers on
+        the attached mesh (``distributed.elastic.reshard``) after the
+        ledger layout changed.  No-op off-mesh or when nothing is
+        loaded."""
+        if self.mesh is None or self.loaded_bits is None:
+            return
+        from repro.distributed.elastic import reshard
+        self.device_params = reshard(
+            self.device_params, self._spec_tree(self.loaded_bits),
+            self.mesh)
 
     # -- loader callback target -------------------------------------------
     def set_variant(self, variant: Optional[ModelVariant]) -> None:
@@ -110,7 +146,13 @@ class TenantRuntime:
         if variant.bits == self.loaded_bits:
             return
         host_tree = self.host[variant.bits]
-        self.device_params = jax.tree.map(jnp.asarray, host_tree)
+        if self.mesh is not None:
+            from repro.distributed import sharding as SH
+            self.device_params = jax.device_put(
+                host_tree,
+                SH.named(self.mesh, self._spec_tree(variant.bits)))
+        else:
+            self.device_params = jax.tree.map(jnp.asarray, host_tree)
         self.loaded_bits = variant.bits
 
     def generate(self, prompts: np.ndarray, max_new: int,
@@ -172,7 +214,8 @@ class EdgeServer:
                  migrate: bool = True,
                  adaptive_delta: bool = False,
                  continuous: bool = False,
-                 kv_page_mb: float = 0.0):
+                 kv_page_mb: float = 0.0,
+                 fault=None):
         self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
@@ -200,9 +243,15 @@ class EdgeServer:
         # size from the largest tenant's 8-token decode cache.
         self.continuous = continuous
         self.kv_page_mb = kv_page_mb
+        # Chip fault schedule (a serving.elastic.FaultSpec): start()
+        # installs an ElasticController that fires chip-down drain plans
+        # and chip-up rebalances on the engine clock.
+        self.fault = fault
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
+        self.elastic = None  # type: Optional["ElasticController"]
+        self.physical_mesh = None  # real per-shard placement (sharded)
         self.prefetch = prefetch
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
@@ -283,6 +332,7 @@ class EdgeServer:
                 self.manager,
                 n_devices=self.manager.state.devices.n_devices,
                 stage_fn=stage, migrate=self.migrate)
+            self._attach_physical_mesh()
         else:
             self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
                            if self.prefetch else None)
@@ -298,6 +348,46 @@ class EdgeServer:
             self, max_batch=self.max_batch,
             batch_window_ms=self.batch_window_ms, loader=self.loader,
             continuous=self.continuous)
+        if self.fault is not None:
+            from repro.serving.elastic import ElasticController
+            ctrl = ElasticController(self.fault, self.manager,
+                                     loader=self.loader)
+            # chip_down/chip_up/drain ride the loader's event hook into
+            # the engine's audit trail, like migrations do.
+            ctrl.on_event = (
+                lambda t, kind, app, mb: self.loader._emit(t, kind,
+                                                           app, mb))
+            ctrl.on_reshard = self._reshard_tenant
+            self.elastic = ctrl
+            self.engine.elastic = ctrl
+
+    def _attach_physical_mesh(self) -> None:
+        """True per-shard placement for real-model tenants: build the
+        physical mesh matching the ledger's logical one and route every
+        ``set_variant`` through ``NamedSharding`` device_puts.  Skipped
+        when the process has fewer devices than the mesh asks for (sim
+        builds, plain CPU) — the ledger stays the accounting authority
+        either way."""
+        shape = self.sharded_mesh
+        n = 1
+        for s in shape:
+            n *= s
+        if jax.device_count() < n:
+            return
+        from repro.launch.mesh import make_mesh_compat
+        dims = (1, shape[0]) if len(shape) == 1 else tuple(shape)
+        self.physical_mesh = make_mesh_compat(dims, ("data", "model"))
+        for tr in self.tenants.values():
+            if hasattr(tr, "attach_mesh"):
+                tr.attach_mesh(self.physical_mesh)
+
+    def _reshard_tenant(self, app: str) -> None:
+        """Elastic-plan hook: re-place a tenant's resident buffers after
+        a drain/rebalance changed its layout (real runtimes on a mesh;
+        no-op for sim executors)."""
+        tr = self.tenants[app]
+        if hasattr(tr, "reshard_device_params"):
+            tr.reshard_device_params()
 
     def _install_kv_pool(self) -> None:
         """Size and attach the paged-KV pool for continuous batching.
@@ -487,19 +577,23 @@ class EdgeServer:
         return r
 
     # ------------------------------------------------------------------
-    def stats(self) -> dict:
-        """Aggregate stats plus the engine's per-tenant latency
-        percentiles, throughput, and KV-pressure counters.  All request
-        counts are per *request* (the engine's unit), so the top-level
-        ratios and the per-tenant breakdown describe the same population
-        — a multi-row serve() batch counts once per row."""
+    def stats(self) -> "ServingStats":
+        """The engine's typed :class:`~repro.serving.stats.ServingStats`
+        with the server-level gauges filled in (residency, latency,
+        redispatch, predictor fits, adaptive windows, device ledger).
+        All request counts are per *request* (the engine's unit), so the
+        top-level ratios and the per-tenant breakdown describe the same
+        population — a multi-row serve() batch counts once per row."""
+        import dataclasses
+
+        from repro.serving.stats import ServingStats
+
         eng_results = self.engine.results if self.engine else []
         if not eng_results:  # serve() always routes through the engine
-            return {}
+            return ServingStats()
         n = len(eng_results)
         ok = [r.latency_ms for r in eng_results if not r.failed]
-        eng = self.engine.stats()
-        out = {
+        extra: dict = {
             "redispatched": self.redispatch_count,
             "resident_mb": self.manager.state.used_mb,
             "weights_mb": self.manager.state.weights_mb,
@@ -509,46 +603,18 @@ class EdgeServer:
             "fail_ratio": sum(r.failed for r in eng_results) / n,
             "mean_latency_s": (float(np.mean(ok)) / 1e3 if ok
                                else float("inf")),
-            "per_tenant": eng["per_tenant"],
-            "kv_downgrades": eng["kv_downgrades"],
-            "kv_rejections": eng["kv_rejections"],
-            "weight_failures": eng["weight_failures"],
-            # Live predictor quality: window hit rate (per batch
-            # admission, the manager's unit — not per request) +
-            # completed background fits.
-            "prediction_hit_rate": eng["prediction_hit_rate"],
+            # Completed background predictor fits (the hit rate itself
+            # comes from the engine view).
             "predictor_fits": sum(
                 getattr(t.predictor, "fits", 0)
                 for t in self.tenants.values()),
         }
-        for key in ("requests_per_sec", "prefetch_hits", "prefetch_wasted",
-                    "prefetch_shrunk", "demand_loads", "loads_committed",
-                    "load_overlap_ms", "fits_scheduled", "shards_landed",
-                    "shards_migrated", "kv_overrelease_mb",
-                    "kv_preemptions", "kv_page_mb", "kv_pages_total",
-                    "kv_pages_used"):
-            if key in eng:
-                out[key] = eng[key]
         if self.adaptive_delta:
             # The residual-adapted prediction windows, per tenant.
-            out["delta_ms"] = {name: self.manager.delta_for(name)
-                               for name in self.tenants}
+            extra["delta_ms"] = {name: self.manager.delta_for(name)
+                                 for name in self.tenants}
         if self.manager.state.devices is not None:
             led = self.manager.state.devices
-            out["device_used_mb"] = led.device_used()
-            out["device_budget_mb"] = led.budgets_mb[0]
-        return out
-
-
-class MultiTenantServer(EdgeServer):
-    """Deprecated pre-``EdgeServer`` name, kept as a thin shim: identical
-    construction signature, every method delegating to
-    :class:`EdgeServer`.  New code should go through
-    ``EdgeServer.build(ServingConfig(...))``."""
-
-    def __init__(self, *args, **kw):
-        warnings.warn(
-            "MultiTenantServer is deprecated; use EdgeServer (or "
-            "EdgeServer.build(ServingConfig(...)) for declarative "
-            "wiring)", DeprecationWarning, stacklevel=2)
-        super().__init__(*args, **kw)
+            extra["device_used_mb"] = led.device_used()
+            extra["device_budget_mb"] = led.budgets_mb
+        return dataclasses.replace(self.engine.stats(), **extra)

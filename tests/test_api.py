@@ -10,10 +10,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import EdgeMultiAI
-from repro.core.policies import (POLICIES, BatchAware, DesperationFallback,
-                                 Policy, available_policies, bfe,
+from repro.core.policies import (BatchAware, DesperationFallback,
+                                 Policy, available_policies,
                                  register_policy, resolve_policy)
-from repro.serving import (EdgeServer, MultiTenantServer, Request,
+from repro.serving import (EdgeServer, Request,
                            kv_cache_mb, poisson_trace)
 from repro.serving.api import (BatchingSpec, LoaderSpec, PredictorSpec,
                                ServingConfig, SimTenant, TenantSpec)
@@ -94,8 +94,8 @@ def test_sim_executor_run_is_deterministic():
 
     (s1, d1), (s2, d2) = one_run(), one_run()
     assert d1 == d2
-    assert s1["warm_ratio"] == s2["warm_ratio"]
-    assert s1["requests"] == len(d1)
+    assert s1.warm_ratio == s2.warm_ratio
+    assert s1.requests == len(d1)
 
 
 def test_reactive_loader_spec():
@@ -206,33 +206,6 @@ def test_batch_aware_wraps_any_policy():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims delegate to the new path
-# ---------------------------------------------------------------------------
-def test_multitenantserver_shim_warns_and_delegates():
-    with pytest.warns(DeprecationWarning, match="EdgeServer"):
-        srv = MultiTenantServer(budget_mb=100.0, policy="bfe")
-    assert isinstance(srv, EdgeServer)
-    assert srv.policy == "bfe" and srv.budget_mb == 100.0
-
-
-def test_policies_dict_shim_matches_registry():
-    from repro.core.memory_state import MemoryState, TenantState
-    from repro.core.model_zoo import ModelVariant, ModelZoo
-    zoo = ModelZoo(app_name="a", variants=(
-        ModelVariant("a-16", 16, 100.0, 99.0, 10.0),
-        ModelVariant("a-8", 8, 50.0, 95.0, 5.0)))
-    state = MemoryState(budget_mb=120.0,
-                        tenants={"a": TenantState(zoo=zoo)})
-    assert set(POLICIES) == {"lfe", "bfe", "ws-bfe", "iws-bfe"}
-    for name, fn in POLICIES.items():
-        old = fn(state, "a", 0.0, delta=10.0, history=10.0)
-        new = resolve_policy(name).plan_procure(state, "a", 0.0,
-                                                delta=10.0, history=10.0)
-        assert old == new, name
-    assert bfe(state, "a", 0.0, delta=10.0).variant.bits == 16
-
-
-# ---------------------------------------------------------------------------
 # Background predictor fits (satellite: ROADMAP open item)
 # ---------------------------------------------------------------------------
 def test_background_fit_scheduled_and_hit_rate_reported():
@@ -249,14 +222,14 @@ def test_background_fit_scheduled_and_hit_rate_reported():
              for i in range(12)]
     stats = srv.engine.run_trace(trace)
     srv.close()  # drains the staging worker: scheduled fits complete
-    assert stats["fits_scheduled"] >= 1, "fit handed to the loader worker"
+    assert stats.fits_scheduled >= 1, "fit handed to the loader worker"
     tr = srv.tenants[TENANTS[0]]
     assert tr.predictor.fits >= 1, "background fit completed"
     sstats = srv.stats()
-    assert 0.0 <= sstats["prediction_hit_rate"] <= 1.0
-    assert sstats["predictor_fits"] == tr.predictor.fits
+    assert 0.0 <= sstats.prediction_hit_rate <= 1.0
+    assert sstats.predictor_fits == tr.predictor.fits
     # A steady 250ms cadence: after warmup most arrivals are predicted.
-    assert stats["prediction_hit_rate"] > 0.5
+    assert stats.prediction_hit_rate > 0.5
 
 
 def test_fit_due_schedule():
@@ -326,7 +299,7 @@ def _burst_run(policy: str):
     stats = srv.engine.run_trace(trace)
     srv.engine.check_event_invariant()
     srv.close()
-    assert stats["requests"] == 4
+    assert stats.requests == 4
     assert all(not r.failed for r in srv.engine.results)
     return stats
 
@@ -338,6 +311,6 @@ def test_batch_aware_avoids_self_downgrade_thrash_under_burst():
     # the 4-wide batch's cache forces an immediate self-downgrade — a
     # wasted large-variant transfer.  Batch-aware plans the full-batch
     # bound and lands on int8 in one transfer.
-    assert head["kv_downgrades"] >= 1
-    assert aware["kv_downgrades"] == 0
-    assert aware["warm_ratio"] >= head["warm_ratio"]
+    assert head.kv_downgrades >= 1
+    assert aware.kv_downgrades == 0
+    assert aware.warm_ratio >= head.warm_ratio

@@ -122,8 +122,8 @@ def test_event_invariant_covers_devices_with_sharded_loads(cfgs):
     trace, _ = poisson_trace(cfgs, requests_per_app=15,
                              mean_iat_ms=300.0, seed=3)
     stats = srv.engine.run_trace(trace)
-    assert stats["requests"] == len(trace)
-    assert stats["shards_landed"] > 0, "the mesh path actually staged"
+    assert stats.requests == len(trace)
+    assert stats.shards_landed > 0, "the mesh path actually staged"
     srv.engine.check_event_invariant()
     loads = [e for e in srv.engine.events
              if e.kind in ("prefetch", "demand")]
@@ -147,7 +147,7 @@ def test_event_log_and_invariant_under_contention(cfgs):
     trace, _ = poisson_trace(cfgs, requests_per_app=15,
                              mean_iat_ms=300.0, seed=3)
     stats = srv.engine.run_trace(trace)
-    assert stats["requests"] == len(trace)
+    assert stats.requests == len(trace)
     srv.engine.check_event_invariant()  # used_mb ≤ budget at every event
     kinds = {e.kind for e in srv.engine.events}
     assert {"submit", "admit", "retire"} <= kinds
@@ -317,15 +317,16 @@ def test_run_async_and_stats_schema(cfgs):
     trace, _ = poisson_trace(cfgs, requests_per_app=5,
                              mean_iat_ms=500.0, seed=1)
     stats = asyncio.run(srv.engine.run_async(trace))
-    assert stats["requests"] == len(trace)
-    assert "requests_per_sec" in stats
+    assert stats.requests == len(trace)
+    assert stats.requests_per_sec is not None
+    assert "requests_per_sec" in stats.to_dict()
     for app in TENANTS:
-        s = stats["per_tenant"][app]
+        s = stats.per_tenant[app]
         for key in ("p50_ms", "p95_ms", "p99_ms", "warm_ratio",
                     "fail_ratio", "throughput_rps", "mean_batch"):
             assert key in s
         assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
     # server.stats() surfaces the engine view
     sstats = srv.stats()
-    assert sstats["per_tenant"].keys() == stats["per_tenant"].keys()
-    assert sstats["kv_mb"] == 0.0
+    assert sstats.per_tenant.keys() == stats.per_tenant.keys()
+    assert sstats.kv_mb == 0.0

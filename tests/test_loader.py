@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import EdgeMultiAI
 from repro.core.model_zoo import ModelVariant, ModelZoo
-from repro.core.policies import iws_bfe
+from repro.core.policies import resolve_policy
 from repro.core.predictor import SeriesPredictor
 from repro.models import transformer as T
 from repro.serving import (BackgroundLoader, EdgeServer, Request,
@@ -81,7 +81,8 @@ def test_procurement_cannot_double_book_inflight_memory():
     loader = BackgroundLoader(mgr)
     loader.enqueue(mgr.plan_demand("a", now=0.0), now_ms=0.0)
     assert mgr.state.free_mb == pytest.approx(300.0)
-    plan = iws_bfe(mgr.state, "b", 0.0, delta=10.0, history=10.0)
+    plan = resolve_policy("iws-bfe").plan_procure(
+        mgr.state, "b", 0.0, delta=10.0, history=10.0)
     assert plan.ok
     assert plan.variant.size_mb <= 300.0, \
         "policy sized b's variant inside the remaining free pool"
@@ -198,8 +199,8 @@ def test_demand_load_admits_cold_not_warm():
         0, cfg.vocab_size, 5).astype(np.int32), max_new=2,
         arrival_ms=t) for t in (10.0, 4000.0)]
     stats = srv.engine.run_trace(trace)
-    assert stats["demand_loads"] == 1
-    assert stats["prefetch_hits"] == 0
+    assert stats.demand_loads == 1
+    assert stats.prefetch_hits == 0
     first, second = sorted(srv.engine.results, key=lambda r: r.arrival_ms)
     assert not first.failed and not first.warm, "waited out its own load"
     assert not second.failed and second.warm, "resident by then"
@@ -319,11 +320,11 @@ def test_event_invariant_holds_with_loads_in_flight():
     trace, _ = poisson_trace(cfgs, requests_per_app=15,
                              mean_iat_ms=300.0, seed=3)
     stats = srv.engine.run_trace(trace)
-    assert stats["requests"] == len(trace)
+    assert stats.requests == len(trace)
     srv.engine.check_event_invariant()
     kinds = [e.kind for e in srv.engine.events]
     assert kinds.count("admit") == kinds.count("retire")
-    assert "prefetch" in kinds or stats["demand_loads"] > 0
+    assert "prefetch" in kinds or stats.demand_loads > 0
     assert srv.manager.state.kv_mb == 0.0
     assert srv.manager.state.inflight_mb == 0.0, "no stranded claims"
     srv.close()

@@ -247,12 +247,12 @@ def test_migration_preserves_per_event_device_invariant():
     prefetch hits), while migration funds the chip and the prefetches
     land."""
     stats, _ = _skewed_run(migrate=True)
-    assert stats["shards_migrated"] > 0, "the skewed mesh migrated"
+    assert stats.shards_migrated > 0, "the skewed mesh migrated"
     off, _ = _skewed_run(migrate=False)
-    assert off["shards_migrated"] == 0
-    assert off["prefetch_hits"] == 0, "blocked chip kills every prefetch"
-    assert stats["prefetch_hits"] > 0, "migration admits those loads"
-    assert stats["warm_ratio"] >= off["warm_ratio"]
+    assert off.shards_migrated == 0
+    assert off.prefetch_hits == 0, "blocked chip kills every prefetch"
+    assert stats.prefetch_hits > 0, "migration admits those loads"
+    assert stats.warm_ratio >= off.warm_ratio
 
 
 def test_migrating_sim_run_is_bit_deterministic():

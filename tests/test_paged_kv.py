@@ -294,7 +294,7 @@ def test_continuous_join_leave_deterministic(cfgs):
     outs = []
     for _ in range(2):
         srv, stats = _run(cfgs, continuous=True)
-        assert stats["requests"] == 40
+        assert stats.requests == 40
         outs.append([(r.rid, r.app, r.done_ms, r.warm, r.failed, r.kv_mb)
                      for r in srv.engine.results])
     assert outs[0] == outs[1]
@@ -302,9 +302,9 @@ def test_continuous_join_leave_deterministic(cfgs):
 
 def test_continuous_pool_drains_on_completion(cfgs):
     srv, stats = _run(cfgs, continuous=True)
-    assert stats["kv_pages_used"] == 0, "every retired seq freed its pages"
+    assert stats.kv_pages_used == 0, "every retired seq freed its pages"
     assert srv.manager.state.kv_mb == 0.0
-    assert stats["kv_overrelease_mb"] == 0.0, \
+    assert stats.kv_overrelease_mb == 0.0, \
         "page-granular release cannot drift from its charge"
 
 
@@ -322,9 +322,9 @@ def test_continuous_fewer_kv_rejections_than_scalar(cfgs):
     single requests where the batch-scalar path rejects wholesale."""
     _, scalar = _run(cfgs, continuous=False, **CONTENTION)
     _, paged = _run(cfgs, continuous=True, **CONTENTION)
-    assert scalar["kv_rejections"] > 0, "the scenario actually contends"
-    assert scalar["kv_rejections"] > paged["kv_rejections"]
-    assert paged["warm_ratio"] >= scalar["warm_ratio"]
+    assert scalar.kv_rejections > 0, "the scenario actually contends"
+    assert scalar.kv_rejections > paged.kv_rejections
+    assert paged.warm_ratio >= scalar.warm_ratio
 
 
 def test_manager_preempts_cold_kv_pages_in_one_plan():
@@ -387,9 +387,9 @@ def test_continuous_on_sharded_mesh_partitions_pages(cfgs):
     stats = srv.engine.run_trace(trace)
     srv.engine.check_event_invariant()
     srv.close()
-    assert stats["requests"] == 20
-    assert stats["kv_pages_used"] == 0
-    assert stats["kv_overrelease_mb"] == 0.0
+    assert stats.requests == 20
+    assert stats.kv_pages_used == 0
+    assert stats.kv_overrelease_mb == 0.0
 
 
 def test_preempted_request_requeues_in_engine(cfgs):
@@ -400,8 +400,8 @@ def test_preempted_request_requeues_in_engine(cfgs):
     srv, stats = _run(cfgs, continuous=True, budget_mb=0.30,
                       kv_page_mb=0.03, max_batch=8, window_ms=50.0,
                       n=24, iat=0.01, max_new=120, seed=11)
-    assert stats["requests"] == 48, "every request reaches a result"
-    assert stats["kv_preemptions"] >= 1
+    assert stats.requests == 48, "every request reaches a result"
+    assert stats.kv_preemptions >= 1
     assert "preempt" in [e.kind for e in srv.engine.events]
-    assert stats["kv_pages_used"] == 0
-    assert stats["kv_overrelease_mb"] == 0.0
+    assert stats.kv_pages_used == 0
+    assert stats.kv_overrelease_mb == 0.0

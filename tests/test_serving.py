@@ -70,8 +70,8 @@ def test_rotation_under_contention(server):
         assert not r.failed, (name, server.manager.state.used_mb)
         now += 5000.0  # beyond the LRU history window
     stats = server.stats()
-    assert stats["resident_mb"] <= server.budget_mb
-    assert stats["fail_ratio"] == 0.0
+    assert stats.resident_mb <= server.budget_mb
+    assert stats.fail_ratio == 0.0
 
 
 def test_manager_accounting_matches_devices(server):

@@ -257,7 +257,7 @@ def test_event_invariant_holds_with_sharded_loads_in_flight():
     trace, _ = poisson_trace(cfgs, requests_per_app=15,
                              mean_iat_ms=300.0, seed=3)
     stats = srv.engine.run_trace(trace)
-    assert stats["requests"] == len(trace)
+    assert stats.requests == len(trace)
     srv.engine.check_event_invariant()
     assert any(e.device_mb is not None for e in srv.engine.events)
     assert srv.manager.state.inflight_mb == 0.0, "no stranded claims"
@@ -292,7 +292,7 @@ def test_sharded_sim_run_is_bit_deterministic():
     s2, r2 = _deterministic_run()
     assert r1 == r2
     assert s1 == s2
-    assert s1["shards_landed"] > 0 and s1["shards_landed"] % N_DEV == 0
+    assert s1.shards_landed > 0 and s1.shards_landed % N_DEV == 0
 
 
 def test_loader_spec_round_trip_and_validation():

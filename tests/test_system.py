@@ -19,7 +19,6 @@ def test_public_api_importable():
     import repro.training.train_step  # noqa: F401
     import repro.distributed.checkpoint  # noqa: F401
 
-    assert set(core.POLICIES) == {"lfe", "bfe", "ws-bfe", "iws-bfe"}
     assert {"lfe", "bfe", "ws-bfe", "iws-bfe",
             "batch-bfe"} <= set(core.available_policies())
     assert len(ARCH_NAMES) == 10
@@ -60,8 +59,8 @@ def test_end_to_end_serving_with_predictors():
         assert not r.failed
         now += 1000.0
     s = srv.stats()
-    assert s["requests"] == 10
-    assert s["fail_ratio"] == 0.0
+    assert s.requests == 10
+    assert s.fail_ratio == 0.0
 
 
 def test_training_end_to_end_loss_decreases():
