@@ -206,6 +206,39 @@ def _run_elastic(fault):
     return stats.to_dict()
 
 
+def _run_cluster(router: str):
+    """One 3-server cluster run over the flash-crowd trace: every box
+    registers the same three tenants, tinyllama's flood arrives
+    unpredicted mid-trace.  Warm-aware routing keeps each tenant's
+    requests on the server already holding its weights; round-robin
+    sprays them, so every server churns every zoo.  Sim executors + one
+    global clock make the pair bit-deterministic — the A/B isolates the
+    routing policy."""
+    from repro.cluster import ClusterConfig, EdgeCluster, RouterSpec
+    from repro.core.simulator import generate_flash_crowd
+    from repro.serving import trace_from_workload
+
+    base = ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in TENANTS),
+        policy="bfe",
+        executor="sim")
+    cfg = ClusterConfig.uniform(
+        3, base, RouterSpec(name=router, handoff_queue=4))
+    cluster = EdgeCluster.build(cfg)
+    wl = generate_flash_crowd(
+        TENANTS, requests_per_app=36, base_iat_ms=8000.0,
+        burst_app=TENANTS[0], burst_requests=40, burst_iat_ms=100.0,
+        seed=7)
+    cfgs = {t.name: t.cfg for t in cluster.servers[0].tenants.values()}
+    trace = trace_from_workload(wl, cfgs, seed=3,
+                                prompt_len=(PROMPT_LEN, PROMPT_LEN + 1),
+                                max_new=MAX_NEW)
+    stats = cluster.run_trace(trace)
+    cluster.check_event_invariant()
+    cluster.close()
+    return stats.to_dict()
+
+
 def run() -> None:
     srv, stats, wall_s = _run_engine(prefetch=True)
     _, reactive, _ = _run_engine(prefetch=False)
@@ -303,6 +336,20 @@ def run() -> None:
          f"drain_migrations={faulted['drain_migrations']} "
          f"drain_downgrades={faulted['drain_downgrades']} "
          f"kv_rejections={faulted['kv_rejections']}")
+    # The cluster A/B: same flash-crowd trace over the same 3-server
+    # fleet, warm-aware routing vs round-robin.  Warm-aware reads only
+    # the typed ServerView surface (residency/staging accuracy, queue
+    # depths) and must beat the state-blind baseline's fleet-wide warm
+    # ratio; the detail carries the routing/spill/hand-off counters.
+    warm = _run_cluster("warm-aware")
+    rr = _run_cluster("round-robin")
+    wc, rc = warm["cluster"], rr["cluster"]
+    emit("serving/cluster/warm_ratio", warm["warm_ratio"],
+         f"round_robin={rr['warm_ratio']:.3f} "
+         f"servers={wc['servers']} routed={wc['routed']} "
+         f"spilled={wc['spilled']} handoffs={wc['handoffs']} "
+         f"rr_spilled={rc['spilled']} "
+         f"per_server={'/'.join(str(n) for n in wc['per_server_requests'])}")
     for app, s in stats["per_tenant"].items():
         emit(f"serving/{app}/p50_ms", s["p50_ms"],
              f"p95={s['p95_ms']:.1f}ms p99={s['p99_ms']:.1f}ms "

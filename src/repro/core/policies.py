@@ -61,6 +61,22 @@ class DemandContext:
     max_batch: int
 
 
+def variant_score(variant: ModelVariant, idle_ms: float) -> float:
+    """The cost-aware ranking score shared by :class:`CostBFE` and the
+    elastic drain planner (``repro.serving.elastic.drain_plan``):
+
+        score(v) = accuracy(v) · min(1, idle_ms / load_ms(v))
+
+    ``idle_ms`` is the gap until the tenant's next predicted request;
+    the readiness factor is the fraction of ``v``'s (re)load that gap
+    could hide.  An unpredicted tenant (``idle_ms`` = ∞) scores pure
+    accuracy — there is no known deadline to miss.
+    """
+    ready = (1.0 if idle_ms == INF
+             else min(1.0, max(idle_ms, 0.0) / max(variant.load_ms, 1e-9)))
+    return variant.accuracy * ready
+
+
 def _free_after(state: MemoryState, app: str,
                 evictions: List[Eviction]) -> float:
     """Free memory once evictions are enacted and app's current model (if
@@ -508,10 +524,7 @@ class CostBFE(BFE):
                 # over its chip's budget, which the device-blind
                 # eviction math above cannot see.
                 continue
-            ready = (1.0 if idle == INF
-                     else min(1.0, max(idle, 0.0)
-                              / max(variant.load_ms, 1e-9)))
-            score = variant.accuracy * ready
+            score = variant_score(variant, idle)
             if score > best_score + 1e-12:
                 best, best_score = plan, score
         return best if best is not None else ProcurePlan(app, None)

@@ -51,6 +51,37 @@ class Workload:
         return float(np.mean(gaps)) if gaps else 1.0
 
 
+def _predict_times(times, rng, deviation: float, scale_ms: float,
+                   residuals: List[float]) -> List[float]:
+    """The paper's prediction protocol over one tenant's arrival times:
+    drop each with probability ``deviation/2`` (unexpected requests),
+    jitter the rest by N(0, ``deviation·scale_ms``).  Draw order is part
+    of the seeded contract — one ``rng.random()`` then (if kept) one
+    ``rng.normal()`` per arrival."""
+    preds: List[float] = []
+    for t in times:
+        if rng.random() < deviation / 2:
+            continue  # dropped prediction -> unexpected request
+        jitter = rng.normal(0.0, deviation * scale_ms)
+        preds.append(float(t + jitter))
+        residuals.append(abs(jitter))
+    preds.sort()
+    return preds
+
+
+def _finalize(requests: List[Tuple[float, str]],
+              predictions: Dict[str, List[float]],
+              residuals: List[float], actual_iats: List[float],
+              pred_iats: List[float], tail_ms: float,
+              deviation: float) -> Workload:
+    requests.sort()
+    horizon = max(t for t, _ in requests) + tail_ms
+    D = float(np.mean(residuals)) if residuals else 0.0
+    sigma = float(np.std(residuals)) if residuals else 0.0
+    kl = _kl_divergence(np.asarray(actual_iats), np.asarray(pred_iats))
+    return Workload(requests, predictions, horizon, deviation, D, sigma, kl)
+
+
 def generate_workload(
     apps: List[str],
     *,
@@ -70,22 +101,107 @@ def generate_workload(
         times = np.cumsum(gaps)
         actual_iats += list(gaps)
         requests += [(float(t), a) for t in times]
-        preds = []
-        for t in times:
-            if rng.random() < deviation / 2:
-                continue  # dropped prediction -> unexpected request
-            jitter = rng.normal(0.0, deviation * mean_iat_ms)
-            preds.append(float(t + jitter))
-            residuals.append(abs(jitter))
-        preds.sort()
-        predictions[a] = preds
-        pred_iats += list(np.diff(preds))
-    requests.sort()
-    horizon = max(t for t, _ in requests) + mean_iat_ms
-    D = float(np.mean(residuals)) if residuals else 0.0
-    sigma = float(np.std(residuals)) if residuals else 0.0
-    kl = _kl_divergence(np.asarray(actual_iats), np.asarray(pred_iats))
-    return Workload(requests, predictions, horizon, deviation, D, sigma, kl)
+        predictions[a] = _predict_times(times, rng, deviation,
+                                        mean_iat_ms, residuals)
+        pred_iats += list(np.diff(predictions[a]))
+    return _finalize(requests, predictions, residuals, actual_iats,
+                     pred_iats, mean_iat_ms, deviation)
+
+
+def generate_flash_crowd(
+    apps: List[str],
+    *,
+    requests_per_app: int = 20,
+    base_iat_ms: float = 8000.0,
+    burst_app: Optional[str] = None,
+    burst_at_ms: Optional[float] = None,
+    burst_requests: int = 40,
+    burst_iat_ms: float = 100.0,
+    deviation: float = 0.3,
+    seed: int = 0,
+) -> Workload:
+    """Poisson baseline plus one tenant's flash crowd: a dense burst of
+    ``burst_requests`` arrivals at ``burst_iat_ms`` mean spacing,
+    starting at ``burst_at_ms`` (default: a quarter into the trace), on
+    ``burst_app`` (default: the first app).
+
+    The burst is part of the *actual* stream but never of the predicted
+    one — a flash crowd is by definition the load the per-tenant
+    predictor did not see coming, which is exactly what the cluster
+    tier's spill/hand-off path exists to absorb.
+    """
+    rng = np.random.default_rng(seed)
+    requests: List[Tuple[float, str]] = []
+    predictions: Dict[str, List[float]] = {}
+    residuals: List[float] = []
+    actual_iats: List[float] = []
+    pred_iats: List[float] = []
+    target = burst_app if burst_app is not None else apps[0]
+    if target not in apps:
+        raise ValueError(f"burst_app {target!r} not in apps")
+    start = (burst_at_ms if burst_at_ms is not None
+             else 0.25 * requests_per_app * base_iat_ms)
+    for a in apps:
+        gaps = rng.exponential(base_iat_ms, requests_per_app)
+        times = list(np.cumsum(gaps))
+        actual_iats += list(gaps)
+        predictions[a] = _predict_times(times, rng, deviation,
+                                        base_iat_ms, residuals)
+        pred_iats += list(np.diff(predictions[a]))
+        if a == target:
+            bgaps = rng.exponential(burst_iat_ms, burst_requests)
+            times = sorted(times + list(start + np.cumsum(bgaps)))
+            actual_iats += list(bgaps)
+        requests += [(float(t), a) for t in times]
+    return _finalize(requests, predictions, residuals, actual_iats,
+                     pred_iats, base_iat_ms, deviation)
+
+
+def generate_diurnal(
+    apps: List[str],
+    *,
+    requests_per_app: int = 60,
+    mean_iat_ms: float = 8000.0,
+    period_ms: Optional[float] = None,
+    amplitude: float = 0.8,
+    deviation: float = 0.3,
+    seed: int = 0,
+) -> Workload:
+    """Diurnal (sinusoidal-rate) Poisson arrivals by thinning: the
+    instantaneous rate is ``(1 + amplitude·sin(2πt/period)) /
+    mean_iat_ms``, so load swells and ebbs around the Poisson baseline
+    — the edge fleet's day/night cycle.  ``period_ms`` defaults to
+    ``20·mean_iat_ms`` (a few peaks per trace).  Predictions follow the
+    same protocol as :func:`generate_workload` over the thinned stream.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    period = period_ms if period_ms is not None else 20.0 * mean_iat_ms
+    rng = np.random.default_rng(seed)
+    requests: List[Tuple[float, str]] = []
+    predictions: Dict[str, List[float]] = {}
+    residuals: List[float] = []
+    actual_iats: List[float] = []
+    pred_iats: List[float] = []
+    lam_max = (1.0 + amplitude) / mean_iat_ms
+    for a in apps:
+        times: List[float] = []
+        t = 0.0
+        prev = 0.0
+        while len(times) < requests_per_app:
+            t += rng.exponential(1.0 / lam_max)
+            lam = (1.0 + amplitude * math.sin(2.0 * math.pi * t / period)
+                   ) / mean_iat_ms
+            if rng.random() < lam / lam_max:
+                times.append(t)
+                actual_iats.append(t - prev)
+                prev = t
+        requests += [(float(tt), a) for tt in times]
+        predictions[a] = _predict_times(times, rng, deviation,
+                                        mean_iat_ms, residuals)
+        pred_iats += list(np.diff(predictions[a]))
+    return _finalize(requests, predictions, residuals, actual_iats,
+                     pred_iats, mean_iat_ms, deviation)
 
 
 def _kl_divergence(p_samples: np.ndarray, q_samples: np.ndarray,

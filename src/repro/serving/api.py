@@ -54,12 +54,18 @@ class TenantSpec:
 
     ``arch`` defaults to ``name`` (the registered config name); ``seed``
     defaults to a stable digest of the name so parameter init is
-    reproducible across processes without coordinating seeds."""
+    reproducible across processes without coordinating seeds.
+    ``service_ms`` overrides the sim executor's virtual batch service
+    time (default: derived from the loaded variant's load cost via the
+    paper's load/infer asymmetry) — the knob that lets a trace build
+    real queue depth; ignored by the real executor, whose service time
+    is measured."""
     name: str
     arch: Optional[str] = None
     precisions: Tuple[int, ...] = (16, 8)
     reduced: bool = True
     seed: Optional[int] = None
+    service_ms: Optional[float] = None
 
     @property
     def config_name(self) -> str:
@@ -321,7 +327,7 @@ def build_server(config: ServingConfig, cls=None):
         if config.executor == "sim":
             srv.register_tenant(spec.name, SimTenant(
                 spec.name, cfg, precisions=spec.precisions,
-                predictor=predictor))
+                predictor=predictor, service_ms=spec.service_ms))
         else:
             import jax
             import jax.numpy as jnp

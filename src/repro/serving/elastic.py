@@ -36,11 +36,13 @@ from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
                     Sequence, Tuple)
 
 from repro.core import actions as A
+from repro.core.policies import variant_score
 from repro.distributed.fault_tolerance import FailureInjector, NodeFailure
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.manager import EdgeMultiAI
     from repro.core.memory_state import MemoryState
+    from repro.core.model_zoo import ModelVariant
 
 __all__ = ["ElasticController", "FaultSpec", "drain_plan",
            "rebalance_plan"]
@@ -62,12 +64,22 @@ class FaultSpec:
     :class:`~repro.distributed.fault_tolerance.FailureInjector`
     (``seed`` is its seed), so the same failure authority drives
     training restarts and serving drains.
+
+    ``prob`` makes the ``down`` entries stochastic: each scheduled down
+    fires with probability ``prob`` via the injector's counter-based
+    ``(seed, step)`` stream, so faulted runs can sweep seeds while one
+    seed stays bit-reproducible.  The default ``prob=0.0`` keeps the
+    deterministic path: every listed down fires, exactly as before.
     """
 
     events: Tuple[Tuple[float, int, str], ...] = ()
     seed: int = 0
+    prob: float = 0.0
 
     def __post_init__(self) -> None:
+        if not 0.0 <= self.prob <= 1.0:
+            raise ValueError(f"fault prob must be in [0, 1], "
+                             f"got {self.prob}")
         norm = []
         for ev in self.events:
             t, chip, kind = ev
@@ -96,20 +108,26 @@ def _fill(remaining: float, rooms: Dict[int, float]
     return out if remaining <= EPS else None
 
 
-def drain_plan(state: "MemoryState", dead: int
+def drain_plan(state: "MemoryState", dead: int, *, now: float = 0.0
                ) -> Tuple[Tuple[A.Action, ...], Dict[str, int],
                           Tuple[Tuple[str, int], ...], float]:
     """Plan the evacuation of chip ``dead`` (already taken offline, so
     its budget reads zero).
 
-    Per tenant holding weights on the chip, in name order: (a) migrate
-    the dead-chip shard to live chips with room (split across chips if
-    needed); (b) else walk the zoo down to the largest variant whose
-    (layout-preserving) dead-chip share the survivors can absorb,
-    downgrading then migrating; (c) else unload.  Sequences holding KV
-    pages on the chip are evicted (their pages land in the pool's
-    offline stash) and returned as preempted ``(app, seq)`` pairs for
-    the engine to requeue.
+    Tenants holding weights on the chip are handled in *descending*
+    ``accuracy · readiness`` order (the :func:`~repro.core.policies.
+    variant_score` CostBFE ranks procurement with, evaluated at ``now``;
+    ties break by name): the residents worth the most by their next
+    predicted request claim the survivors' free room first and migrate
+    intact, so the degradation cascade lands on the variants that were
+    cheapest to lose.  Per tenant: (a) migrate the dead-chip shard to
+    live chips with room (split across chips if needed); (b) else walk
+    the zoo down to the largest variant whose (layout-preserving)
+    dead-chip share the survivors can absorb, downgrading then
+    migrating; (c) else unload.  Sequences holding KV pages on the chip
+    are evicted (their pages land in the pool's offline stash) and
+    returned as preempted ``(app, seq)`` pairs for the engine to
+    requeue.
 
     Returns ``(actions, counters, preempted, vacated_mb)``.  The plan is
     feasible by construction — the worst case degrades to pure unloads —
@@ -124,7 +142,16 @@ def drain_plan(state: "MemoryState", dead: int
     acts: List[A.Action] = []
     vacated = 0.0
 
-    for app in sorted(led.weights):
+    def rank(app: str) -> float:
+        t = state.tenants[app]
+        if t.loaded is None:
+            return 0.0
+        pred = t.predicted_next
+        idle = math.inf if pred is None or math.isinf(pred) \
+            else max(pred - now, 0.0)
+        return variant_score(t.loaded, idle)
+
+    for app in sorted(led.weights, key=lambda a: (-rank(a), a)):
         cur = list(led.weights[app])
         share = cur[dead]
         if share <= EPS:
@@ -276,10 +303,17 @@ class ElasticController:
         self.loader = loader
         # The training-world failure authority, keyed by schedule index:
         # a scheduled "down" only drains if the injector actually fires.
-        self.injector = FailureInjector(
-            fail_at_steps=tuple(i for i, ev in enumerate(spec.events)
-                                if ev[2] == "down"),
-            seed=spec.seed)
+        # prob > 0 switches the injector to its counter-based (seed,
+        # step) stream — the same schedule becomes a seed-sweepable
+        # failure distribution.
+        if spec.prob > 0.0:
+            self.injector = FailureInjector(prob=spec.prob,
+                                            seed=spec.seed)
+        else:
+            self.injector = FailureInjector(
+                fail_at_steps=tuple(i for i, ev in enumerate(spec.events)
+                                    if ev[2] == "down"),
+                seed=spec.seed)
         self._next = 0
         self.on_event: Optional[Callable[[float, str, str, float],
                                          None]] = None
@@ -289,6 +323,10 @@ class ElasticController:
         self.drain_migrations = 0
         self.drain_downgrades = 0
         self.drain_unloads = 0
+        self.repromotions = 0
+        # Pre-drain variants of tenants a drain degraded, awaiting
+        # re-promotion when a chip returns.
+        self._demoted: Dict[str, "ModelVariant"] = {}
 
     # -- engine protocol -------------------------------------------------
     def next_event_ms(self) -> float:
@@ -346,7 +384,8 @@ class ElasticController:
         if state.kv_pool is not None:
             state.kv_pool.offline_device(chip)
 
-        acts, counters, preempted, vacated = drain_plan(state, chip)
+        acts, counters, preempted, vacated = drain_plan(state, chip,
+                                                        now=now)
         if acts:
             msg = state.simulate(A.ResidencyPlan(acts))
             if msg is not None:
@@ -359,6 +398,14 @@ class ElasticController:
                             "unloads": sum(
                                 1 for a in acts
                                 if isinstance(a, A.Unload))}
+            # Remember what each degraded tenant held before the drain,
+            # so chip_up can restore it.  setdefault: across stacked
+            # drains the *original* variant is the re-promotion target.
+            for a in acts:
+                if isinstance(a, (A.Downgrade, A.Unload)):
+                    was = state.tenants[a.app].loaded
+                    if was is not None:
+                        self._demoted.setdefault(a.app, was)
             self.manager._apply_actions(acts, now=now)
         for app, seq in preempted:
             self.manager.kv_preemptions += 1
@@ -389,3 +436,42 @@ class ElasticController:
                 for app in self._affected(acts):
                     self.on_reshard(app)
         self.chips_recovered += 1
+        self._repromote(now)
+
+    def _repromote(self, now: float) -> None:
+        """Restore the variants a drain degraded, now that capacity is
+        back: a staged load through the loader when one is attached (the
+        transfer overlaps serving, exactly like a prefetch — committing
+        before the tenant's next request makes that admission warm),
+        else a synchronous ``Load``.  Each attempt is simulate-validated;
+        a target that no longer fits is dropped rather than retried
+        forever."""
+        state = self.manager.state
+        for app in sorted(self._demoted):
+            want = self._demoted[app]
+            t = state.tenants[app]
+            if t.loaded is not None and t.loaded.size_mb >= want.size_mb:
+                del self._demoted[app]
+                continue
+            if self.loader is not None and app in self.loader.inflight:
+                continue  # the loader owns this tenant's residency;
+                # a later chip_up (or the load itself) resolves it
+            if self.loader is not None:
+                plan = A.ResidencyPlan(
+                    (A.staged_load_action(state, app, want),))
+                if state.simulate(plan) is None \
+                        and self.loader.execute(plan, now) is not None:
+                    self.repromotions += 1
+            else:
+                # A bare Load is device-blind by design (admission may
+                # transiently overshoot a chip mid-downgrade), so mirror
+                # the per-device commit check here: fits_variant
+                # validates exactly the layout on_load will write.
+                plan = A.ResidencyPlan((A.Load(app, want),))
+                if state.simulate(plan) is None \
+                        and state.devices.fits_variant(app, want):
+                    self.manager._apply_actions(plan.actions, now=now)
+                    self.repromotions += 1
+                    if self.on_reshard is not None:
+                        self.on_reshard(app)
+            del self._demoted[app]

@@ -258,6 +258,9 @@ class ServingEngine:
         # window — used to measure how much of each load was hidden
         # behind other tenants' prefill/decode.
         self._spans: List[Tuple[float, float, str]] = []
+        # Cluster-tier local clock: where cluster_advance left this
+        # server's loop (a batch may have run past the last horizon).
+        self._cluster_now = 0.0
 
     @property
     def audit_trail(self) -> List[AuditEvent]:
@@ -610,6 +613,95 @@ class ServingEngine:
         return self.stats()
 
     # ------------------------------------------------------------------
+    # Cluster tier: the shared-clock protocol EdgeCluster drives
+    # ------------------------------------------------------------------
+    def cluster_submit(self, req: Request) -> None:
+        """Cluster-tier entry: enqueue a routed request at its own
+        arrival timestamp.  The cluster loop owns the global clock and
+        pumps arrivals itself, so unlike :meth:`run_trace` there is no
+        trace replay here — one call per routed request.  The local
+        clock advances to the arrival (an idle server was simply idle
+        until now; a busy one is already past it), so queued work never
+        executes before it arrived."""
+        self.submit(req, req.arrival_ms)
+        self._cluster_now = max(self._cluster_now, req.arrival_ms)
+
+    def cluster_advance(self, horizon_ms: float) -> float:
+        """Run this server's loop up to — exclusive of — ``horizon_ms``.
+
+        The same cycle as :meth:`run_trace` (maintenance pass, pull a
+        batch, execute, advance the local clock by its service time),
+        except arrivals come from :meth:`cluster_submit` between calls
+        instead of an internal trace.  Only work *starting* strictly
+        before the horizon runs, so a request routed at ``t`` by the
+        cluster loop is visible before any same-instant batch is pulled
+        — the exact submit-before-batch ordering ``run_trace`` has for
+        same-timestamp arrivals.  The local clock may end past the
+        horizon (a batch's service time is indivisible); it never ends
+        before a completed horizon.
+
+        Returns this server's next internal event time (queued work's
+        resume instant, a pending load commit, a prefetch trigger, or a
+        scheduled chip fault) — ``math.inf`` when fully drained.  The
+        cluster loop folds these into its global clock.
+        """
+        self._wire_audit()
+        now = self._cluster_now
+        while True:
+            if not self.batcher.pending():
+                t_next = math.inf
+                if self.loader is not None:
+                    t_next = min(self.loader.earliest_ready(),
+                                 self.host.next_prefetch_trigger(now))
+                if self.elastic is not None:
+                    t_next = min(t_next, self.elastic.next_event_ms())
+                if not t_next < horizon_ms:
+                    break
+                now = max(now, t_next)
+            elif not now < horizon_ms:
+                t_next = now  # runnable work at/after the horizon
+                break
+            if self.loader is not None:
+                self._reap_loads(now)
+            if self.elastic is not None:
+                self._now = now
+                self.elastic.poll(now)
+            if self.loader is not None:
+                self.host.predict_and_preload(now)
+                self._stage_demand_loads(now)
+                batch = self.batcher.next_batch(
+                    exclude=self.loader.inflight)
+            else:
+                batch = self.batcher.next_batch()
+            if batch is None:
+                if not self.batcher.pending():
+                    continue  # maintenance consumed the wake-up;
+                    # recompute the idle candidates from the top
+                # Every queued tenant is awaiting its own load.
+                t_next = math.inf
+                if self.loader is not None:
+                    t_next = self.loader.earliest_ready()
+                if self.elastic is not None:
+                    t_next = min(t_next, self.elastic.next_event_ms())
+                if not t_next < horizon_ms:
+                    break
+                now = max(now, t_next)
+                continue
+            t0 = now
+            _, service_ms, _ = self.execute_batch(
+                batch, now, charge_load=self.loader is None)
+            now += service_ms
+            self._spans.append((t0, now, batch.app))
+        self._cluster_now = now
+        return t_next
+
+    def cluster_finish(self) -> None:
+        """Terminal pass once the cluster loop drained every server:
+        commit whatever is still staging so the audit trail balances."""
+        if self.loader is not None:
+            self._reap_loads(math.inf)
+
+    # ------------------------------------------------------------------
     # Continuous batching: the request is the admission unit
     # ------------------------------------------------------------------
     def _step_ms(self, app: str, n_active: int) -> float:
@@ -835,7 +927,8 @@ class ServingEngine:
                 chips_lost=self.elastic.chips_lost,
                 chips_recovered=self.elastic.chips_recovered,
                 drain_migrations=self.elastic.drain_migrations,
-                drain_downgrades=self.elastic.drain_downgrades)
+                drain_downgrades=self.elastic.drain_downgrades,
+                repromotions=self.elastic.repromotions)
         if not self.results:
             return ServingStats(**kw)
         kw["warm_ratio"] = (sum(r.warm for r in self.results)

@@ -52,6 +52,8 @@ class EventKind(str, enum.Enum):
     CHIP_DOWN = "chip_down"
     CHIP_UP = "chip_up"
     DRAIN = "drain"
+    # Cluster tier (cross-server tenant movement).
+    HANDOFF = "handoff"
 
     def __str__(self) -> str:  # keep f-string formatting as the raw kind
         return self.value
@@ -126,6 +128,14 @@ class ServingStats:
     chips_recovered: Optional[int] = None
     drain_migrations: Optional[int] = None
     drain_downgrades: Optional[int] = None
+    # Variants the drain degraded that chip_up restored.
+    repromotions: Optional[int] = None
+
+    # --- cluster tier (EdgeCluster.stats() only) ---------------------
+    # Fleet-level block: router name, routed/spilled/handed-off counts,
+    # and per-server request/warm-ratio tuples.  None on single-server
+    # stats, so the dict keys only exist when a cluster produced them.
+    cluster: Optional[Dict[str, Any]] = None
 
     # --- server-level gauges (EdgeServer.stats() only) ---------------
     redispatched: Optional[int] = None

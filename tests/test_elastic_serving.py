@@ -320,3 +320,115 @@ def test_set_variant_places_real_shards_matching_ledger_fractions():
     tr.reshard_device_params()  # recovery path: same mesh, still placed
     leaf = jax.tree.leaves(tr.device_params)[0]
     assert len(leaf.addressable_shards) == 8
+
+
+# ---------------------------------------------------------------------------
+# Degrade-aware drain ranking + re-promotion (cluster-tier satellites)
+# ---------------------------------------------------------------------------
+def _ranked_manager():
+    """Two equal tenants on a mesh where only ONE dead-chip share can
+    rehome intact: 240/chip budgets, both loaded at 400 (100/chip), so
+    survivors hold 3x40 free — exactly one share.  Whoever drain_plan
+    ranks first migrates intact; the other degrades."""
+    mgr = make_manager(budgets=(240.0,) * N_DEV,
+                       a=_zoo("a", [400, 200]), b=_zoo("b", [400, 200]))
+    st = mgr.state
+    st.apply(A.plan_of(A.Load("a", st.tenants["a"].zoo.largest)))
+    st.apply(A.plan_of(A.Load("b", st.tenants["b"].zoo.largest)))
+    return mgr
+
+
+@pytest.mark.parametrize("busy,idle", [("a", "b"), ("b", "a")])
+def test_drain_ranks_by_accuracy_times_readiness(busy, idle):
+    mgr = _ranked_manager()
+    st = mgr.state
+    # The busy tenant's next request is imminent -> readiness 0 -> it
+    # ranks last and eats the downgrade; the idle one (no prediction ->
+    # pure accuracy) migrates intact.  Symmetric under the swap, so the
+    # order is the score's doing, not the name tie-break.
+    st.tenants[busy].predicted_next = 100.0
+    st.tenants[idle].predicted_next = None
+    st.devices.offline(3)
+    acts, counters, _, _ = drain_plan(st, 3, now=100.0)
+    assert counters["downgrades"] == 1
+    assert st.simulate(A.ResidencyPlan(acts)) is None
+    st.apply(A.ResidencyPlan(acts))
+    st.devices.check_invariant()
+    assert st.tenants[idle].loaded.size_mb == 400.0
+    assert st.tenants[busy].loaded.size_mb == 200.0
+
+
+def test_chip_up_repromotes_demoted_variant():
+    # Tight mesh from the downgrade test: the drain demotes 480 -> 200;
+    # the chip's return must restore the original variant and count it.
+    mgr = make_manager(budgets=(130.0,) * N_DEV,
+                       a=_zoo("a", [480, 200]))
+    st = mgr.state
+    st.apply(A.plan_of(A.Load("a", st.tenants["a"].zoo.largest)))
+    ctl = ElasticController(
+        FaultSpec(events=((10.0, 0, "down"), (50.0, 0, "up"))), mgr)
+    ctl.poll(10.0)
+    assert ctl.drain_downgrades == 1
+    assert st.tenants["a"].loaded.size_mb == 200.0
+    assert ctl.repromotions == 0
+    ctl.poll(50.0)
+    assert ctl.repromotions == 1
+    assert st.tenants["a"].loaded.size_mb == 480.0
+    assert not ctl._demoted
+    st.devices.check_invariant()
+    # Idempotent: a second cycle with nothing demoted re-promotes nothing.
+    assert ctl.next_event_ms() == float("inf")
+
+
+def test_repromotion_dropped_when_capacity_never_returns():
+    # The demoting chip comes back while ANOTHER chip is still down, so
+    # the original variant's canonical split (120/chip incl. the dead
+    # one) cannot fit: the re-promotion is dropped (not retried forever)
+    # and the tenant keeps its demoted variant.
+    mgr = make_manager(budgets=(130.0,) * N_DEV,
+                       a=_zoo("a", [480, 200]))
+    st = mgr.state
+    st.apply(A.plan_of(A.Load("a", st.tenants["a"].zoo.largest)))
+    ctl = ElasticController(
+        FaultSpec(events=((10.0, 0, "down"), (20.0, 1, "down"),
+                          (50.0, 0, "up"))), mgr)
+    ctl.poll(20.0)
+    assert st.tenants["a"].loaded.size_mb == 200.0
+    ctl.poll(50.0)
+    assert ctl.repromotions == 0
+    assert not ctl._demoted
+    assert st.tenants["a"].loaded.size_mb == 200.0
+    st.devices.check_invariant()
+
+
+def test_fault_prob_validates_and_gates_the_schedule():
+    with pytest.raises(ValueError, match="prob"):
+        FaultSpec(prob=1.5)
+    with pytest.raises(ValueError, match="prob"):
+        FaultSpec(prob=-0.1)
+    # prob=1.0: every scheduled down fires through the injector's
+    # counter-based stream; prob~0: none do (the schedule is armed but
+    # the dice never land).
+    for prob, lost in ((1.0, 1), (1e-12, 0)):
+        mgr = make_manager(budgets=(500.0,) * N_DEV)
+        ctl = ElasticController(
+            FaultSpec(events=((10.0, 1, "down"),), prob=prob, seed=5),
+            mgr)
+        ctl.poll(10.0)
+        assert ctl.chips_lost == lost, prob
+
+
+def test_stochastic_fault_run_is_bit_deterministic():
+    spec = FaultSpec(events=FAULT.events, prob=0.5, seed=3)
+    s1, e1 = _run_elastic(spec)
+    s2, e2 = _run_elastic(spec)
+    assert s1 == s2 and e1 == e2
+    # And the deterministic path (prob=0) is unchanged by the knob:
+    # FaultSpec(prob=0.0) equals the legacy spec field for field.
+    assert FaultSpec(events=FAULT.events) == FAULT
+
+
+def test_stats_carry_repromotions_counter():
+    stats, _ = _run_elastic(FAULT)
+    d = stats.to_dict()
+    assert d["repromotions"] >= 0
