@@ -63,6 +63,18 @@ the *same* trace:
   the A/B row — its detail carries the downgrade-only run's warm ratio,
   ``shards_migrated``, and both runs' prefetch-hit counts, showing
   migration admits loads the downgrade-only path shrank or failed.
+* **quantized** — the sharded sim engine with quantize-on-the-wire
+  staging (``LoaderSpec(compress="int8")``) vs full-width staging on
+  the same trace.  Every load ships the int8 payload + per-group
+  scales host→chip and dequantizes on land, so each transfer's
+  virtual ``load_ms`` shrinks by the wire ratio (~0.56× for bf16)
+  while claims and ledgers still charge the resident footprint.
+  ``serving/quantized/load_ms`` is emitted as the *reduction* in
+  total committed wire milliseconds (full − compressed, higher is
+  better) so the one-sided gate holds "compressed staging strictly
+  reduces load_ms"; ``serving/quantized/warm_ratio`` must hold
+  against the full-width run's.  Sim executors make the pair
+  bit-deterministic.
 * **elastic** — the sharded sim engine under a mid-trace chip-loss/
   recovery schedule (``FaultSpec``), A/B'd against the same trace with
   no faults.  The dead chip is drained through one transactional
@@ -178,6 +190,34 @@ def _run_paged(continuous: bool):
     srv.engine.check_event_invariant()
     srv.close()
     return stats.to_dict()
+
+
+def _run_quantized(compress):
+    """One sim-executor run of the quantize-on-the-wire A/B: all three
+    tenants on a 4-chip sharded sim mesh under the unload-heavy BFE
+    policy (more committed loads → more wire traffic to compress),
+    staged compressed (``compress="int8"``) or full-width (``None``).
+    The returned dict carries ``wire_ms`` — the total committed wire
+    milliseconds from the loader's history (LoadRecord.load_ms is the
+    *wire* transfer time, so compression shows up here directly)."""
+    srv = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in TENANTS),
+        executor="sim",
+        policy="bfe",
+        delta_ms=750.0,
+        batching=BatchingSpec(max_batch=4, window_ms=20.0),
+        loader=LoaderSpec(sharded=True, mesh_shape=(4,),
+                          compress=compress),
+        kv_headroom_shape=(2, 12)))
+    cfgs = {t.name: t.cfg for t in srv.tenants.values()}
+    trace, _ = poisson_trace(cfgs, requests_per_app=30, mean_iat_ms=400.0,
+                             seed=7)
+    stats = srv.engine.run_trace(trace)
+    srv.engine.check_event_invariant()
+    d = stats.to_dict()
+    d["wire_ms"] = sum(rec.load_ms for rec in srv.engine.loader.history)
+    srv.close()
+    return d
 
 
 def _run_elastic(fault):
@@ -321,6 +361,27 @@ def run() -> None:
          f"scalar={scalar['warm_ratio']:.3f} "
          f"scalar_rejections={scalar['kv_rejections']} "
          f"paged_rejections={paged['kv_rejections']}")
+    # The quantized A/B: same trace, same 4-chip sim mesh, staging
+    # compressed vs full-width.  The load_ms row is the reduction in
+    # total committed wire milliseconds (full − compressed, one-sided:
+    # compression must strictly shorten the transfers); the warm row
+    # holds the compressed engine to the full-width run's ratio — a
+    # shorter transfer can only make prefetches readier.
+    quant = _run_quantized("int8")
+    fullw = _run_quantized(None)
+    emit("serving/quantized/load_ms", fullw["wire_ms"] - quant["wire_ms"],
+         f"full_ms={fullw['wire_ms']:.6g} "
+         f"compressed_ms={quant['wire_ms']:.6g} "
+         f"wire_mb={quant['wire_mb_staged']:.2f} "
+         f"full_wire_mb={fullw['wire_mb_staged']:.2f} "
+         f"loads_committed={quant['loads_committed']} "
+         f"full_loads_committed={fullw['loads_committed']}")
+    emit("serving/quantized/warm_ratio", quant["warm_ratio"],
+         f"full_width={fullw['warm_ratio']:.3f} "
+         f"prefetch_hits={quant['prefetch_hits']} "
+         f"full_prefetch_hits={fullw['prefetch_hits']} "
+         f"load_overlap_ms={quant['load_overlap_ms']:.6g} "
+         f"inplace_downgrades={quant['inplace_downgrades']}")
     # The elastic A/B: same trace, same 4-chip sim mesh, fault schedule
     # on vs off.  Chip 3 is drained mid-trace and recovered later; the
     # warm ratio must hold against the undisturbed run (the drain plan

@@ -77,10 +77,23 @@ def register_router(name: str) -> Callable:
 
 
 def available_routers() -> Tuple[str, ...]:
+    """The registered router names, sorted — what a
+    :class:`~repro.cluster.config.RouterSpec` may name.
+
+    >>> available_routers()
+    ('least-loaded', 'round-robin', 'warm-aware')
+    """
     return tuple(sorted(_ROUTERS))
 
 
 def resolve_router(spec: "RouterSpec | str") -> Router:
+    """Resolve a :class:`RouterSpec` (or bare name) to a live router
+    instance through the registry; unknown names raise ``KeyError``
+    listing the registered set.
+
+    >>> resolve_router("round-robin").name
+    'round-robin'
+    """
     if isinstance(spec, str):
         spec = RouterSpec(name=spec)
     if spec.name not in _ROUTERS:

@@ -65,6 +65,17 @@ class PlanError(RuntimeError):
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class Eviction:
+    """One victim decision from a policy: replace ``app``'s resident
+    ``old`` variant with ``new`` (``None`` = unload outright).  Compiled
+    to :class:`Unload`/:class:`Downgrade` actions by
+    :func:`eviction_actions`.
+
+    >>> from repro.core.model_zoo import ModelVariant
+    >>> old = ModelVariant("m-16bit", 16, 100.0, 0.9, 50.0)
+    >>> new = ModelVariant("m-8bit", 8, 50.0, 0.85, 25.0)
+    >>> Eviction("m", old, new).freed_mb
+    50.0
+    """
     app: str
     old: ModelVariant
     new: Optional[ModelVariant]  # None = fully unloaded
@@ -76,6 +87,10 @@ class Eviction:
 
 @dataclass(frozen=True)
 class ProcurePlan:
+    """A policy's full answer to "procure weights for ``app``": the
+    variant to load (``None`` = declared inference failure) plus the
+    victim evictions that fund it.  :func:`procure_actions` compiles it
+    onto the action IR."""
     app: str
     variant: Optional[ModelVariant]  # None => inference failure
     evictions: Tuple[Eviction, ...] = ()
@@ -113,14 +128,37 @@ class Load:
 
 @dataclass(frozen=True)
 class Unload:
+    """Evict ``app``'s resident variant outright (the policies' and the
+    drain planner's last-resort verb); its weights and per-device shards
+    are released in the same transaction."""
     app: str
     variant = None  # uniform `.variant` access for stage callbacks
 
 
 @dataclass(frozen=True)
 class Downgrade:
+    """Replace ``app``'s resident variant with the smaller ``variant``.
+
+    ``in_place=True`` declares that the switch is an **in-place
+    requantization**: ``variant`` is a lower-bits sibling of the resident
+    variant, so the new weights are derived from the resident leaves via
+    the ``quant_matmul`` int8 machinery — zero bytes move over the
+    host→chip link.  The residency/ledger effect is identical either way
+    (the ``DeviceLedger`` scales the tenant's current layout to the new
+    total atomically); only the physical staging cost differs, which the
+    loader channels count (``inplace_downgrades`` vs ``wire_mb_staged``).
+    ``MemoryState`` validates the claim: an in-place downgrade to a
+    variant that is not strictly lower-bits than the resident one — or
+    with nothing resident at all — is a :class:`PlanError`.
+
+    >>> from repro.core.model_zoo import ModelVariant
+    >>> v8 = ModelVariant("m-8bit", 8, 50.0, 0.85, 25.0)
+    >>> Downgrade("m", v8, in_place=True).in_place
+    True
+    """
     app: str
     variant: ModelVariant
+    in_place: bool = False
 
 
 @dataclass(frozen=True)
@@ -222,9 +260,25 @@ def plan_of(*actions: Action) -> ResidencyPlan:
 # ---------------------------------------------------------------------------
 # Builders: compile policy-level plans onto the action IR
 # ---------------------------------------------------------------------------
+def downgrade_action(app: str, old: Optional[ModelVariant],
+                     new: ModelVariant) -> Downgrade:
+    """A :class:`Downgrade` that requantizes **in place** whenever it
+    can: ``new`` strictly lower-bits than the resident ``old`` means the
+    target weights are derivable from the resident leaves (int8/int4
+    from wider), so the variant switch moves zero bytes over the link.
+    Every planner that emits downgrades compiles through here, so the
+    preference is uniform across cost-bfe, desperation, KV headroom,
+    self-downgrade, and the elastic drain."""
+    in_place = old is not None and new.bits < old.bits
+    return Downgrade(app, new, in_place=in_place)
+
+
 def eviction_actions(evictions) -> Tuple[Action, ...]:
-    """Victim evictions as actions: ``new=None`` unloads, else downgrades."""
-    return tuple(Unload(e.app) if e.new is None else Downgrade(e.app, e.new)
+    """Victim evictions as actions: ``new=None`` unloads, else downgrades
+    (in place when the target is a lower-bits sibling of the resident
+    variant — see :func:`downgrade_action`)."""
+    return tuple(Unload(e.app) if e.new is None
+                 else downgrade_action(e.app, e.old, e.new)
                  for e in evictions)
 
 

@@ -425,7 +425,8 @@ class EdgeMultiAI:
                 freed += v.size_mb - nxt.size_mb
                 v = nxt
             if v is not t.loaded:
-                self._apply_actions((A.Downgrade(app, v),))
+                self._apply_actions(
+                    (A.downgrade_action(app, t.loaded, v),))
                 self_downgraded = True
         if (self.policy is not None and self.state.devices is not None
                 and t.loaded is not None and self.migrate
@@ -455,7 +456,8 @@ class EdgeMultiAI:
                    and not self.state.devices.fits_variant(app, v)):
                 v = t.zoo.next_smaller(v)
             if v is not None and v is not t.loaded:
-                self._apply_actions((A.Downgrade(app, v),))
+                self._apply_actions(
+                    (A.downgrade_action(app, t.loaded, v),))
                 self_downgraded = True
         if (self.state.devices is not None and t.loaded is not None
                 and not self.state.devices.fits_variant(app, t.loaded)):

@@ -713,6 +713,19 @@ class MemoryState:
                 raise A.PlanError(
                     f"downgrade {act.app} to {act.variant.size_mb:.2f}MB "
                     f"> loaded {t.loaded.size_mb:.2f}MB")
+            if act.in_place:
+                # In-place requantization derives the target weights
+                # from the resident leaves: there must *be* resident
+                # leaves, and only a strictly lower-bits sibling is
+                # derivable (int8/int4 from wider — never back up).
+                if t.loaded is None:
+                    raise A.PlanError(
+                        f"in-place downgrade {act.app}: nothing resident")
+                if act.variant.bits >= t.loaded.bits:
+                    raise A.PlanError(
+                        f"in-place downgrade {act.app}: {act.variant.bits}"
+                        f"-bit target not below resident "
+                        f"{t.loaded.bits}-bit")
             t.loaded = act.variant
             if self.devices is not None:
                 self.devices.on_load(act.app, act.variant)

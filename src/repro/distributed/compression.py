@@ -11,6 +11,14 @@ Two layers:
   moves int8 on the wire (quantize → psum(int8 payload as int32 partial
   sums won't overflow for ≤2^23 shards) → dequantize), demonstrating the
   cross-pod bandwidth saving on the multi-pod mesh's ``pod`` axis.
+
+The same byte-count argument applies to *weight staging*:
+:func:`wire_compression_ratio` is the serving loaders' contract for
+``LoaderSpec(compress="int8")`` — host→chip shard streams ship the int8
+payload plus per-group scales instead of full-width leaves, so a load's
+virtual transfer time shrinks by exactly this ratio while the resident
+footprint (what ``inflight_mb`` claims and the ``DeviceLedger`` charge)
+is unchanged.
 """
 from __future__ import annotations
 
@@ -31,6 +39,32 @@ class CompressionState(NamedTuple):
     def init(cls, params: PyTree) -> "CompressionState":
         return cls(error=jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def wire_compression_ratio(bits: int, *, scheme: str = "int8",
+                           group: int = 32) -> float:
+    """Bytes-on-the-wire ratio for staging a ``bits``-wide variant with
+    ``scheme`` compression, as a fraction of the uncompressed transfer.
+
+    The int8 scheme ships 1 byte per element plus one f32 scale per
+    group of ``group`` elements along the reduction axis — the exact
+    payload layout :func:`repro.kernels.quant_matmul.quantize_params`
+    produces (per-(K-group, N-column) symmetric scales, ``group=32``)
+    and :func:`repro.kernels.quant_matmul.quant_matmul` dequantizes in
+    VMEM on the other end.  A variant already at or below 8 bits gains
+    nothing (the payload *is* its resident width), so the ratio clamps
+    at 1.0 — compression never makes a transfer slower.
+
+    >>> wire_compression_ratio(16)   # bf16 → int8 payload + scales
+    0.5625
+    >>> wire_compression_ratio(8)    # already int8-resident: no win
+    1.0
+    """
+    if scheme != "int8":
+        raise ValueError(f"unknown wire-compression scheme {scheme!r}")
+    wire_bytes = 1.0 + 4.0 / group          # int8 payload + f32 scales
+    resident_bytes = bits / 8.0
+    return min(1.0, wire_bytes / resident_bytes)
 
 
 def _q_dq(x: jnp.ndarray) -> jnp.ndarray:

@@ -6,6 +6,15 @@ precision variants are *served through this kernel*, so the ~2–4× weight
 footprint saving (which is what the Edge-MultiAI manager trades on) comes
 with HBM-bandwidth savings rather than a dequantize-to-HBM round trip.
 
+The same int8-payload-plus-per-group-scales layout is the serving
+stack's *wire format* too: ``LoaderSpec(compress="int8")`` stages loads
+in it (``repro.distributed.compression.wire_compression_ratio`` prices
+the transfer), and a ``Downgrade(in_place=True)`` in the residency IR
+requantizes resident leaves into it on-chip — a variant switch that
+moves zero bytes over the host link, because the weights this kernel
+serves are exactly what :func:`quantize_params` derives from the wider
+resident copy.
+
 TPU mapping
 -----------
 * Grid ``(nM, nN, nK)``, K innermost; an f32 accumulator tile persists in

@@ -59,7 +59,11 @@ class TenantSpec:
     time (default: derived from the loaded variant's load cost via the
     paper's load/infer asymmetry) — the knob that lets a trace build
     real queue depth; ignored by the real executor, whose service time
-    is measured."""
+    is measured.
+
+    >>> TenantSpec("tinyllama-1.1b", precisions=(16, 8)).config_name
+    'tinyllama-1.1b'
+    """
     name: str
     arch: Optional[str] = None
     precisions: Tuple[int, ...] = (16, 8)
@@ -98,7 +102,11 @@ class BatchingSpec:
     decode batch per step, and frees its pages the step it retires.
     ``kv_page_mb`` is the page size knob (0 = auto: the largest
     tenant's 8-token decode cache); smaller pages waste less memory per
-    request, larger pages keep the page tables shorter."""
+    request, larger pages keep the page tables shorter.
+
+    >>> BatchingSpec(max_batch=4, window_ms=20.0).continuous
+    False
+    """
     max_batch: int = 8
     window_ms: float = 0.0
     continuous: bool = False
@@ -126,12 +134,26 @@ class LoaderSpec:
     to chips with room (``MigrateShard`` actions, committed atomically
     with the load) instead of failing into the downgrade path.
     ``migrate=False`` keeps the PR-4 downgrade-only behaviour — the
-    benchmark's A/B baseline."""
+    benchmark's A/B baseline.
+
+    ``compress="int8"`` stages **compressed bytes** host→chip: every
+    load (both loader channels) ships the int8 payload plus per-group
+    scales instead of full-width leaves and dequantizes on land, so the
+    virtual transfer time shrinks by
+    :func:`repro.distributed.compression.wire_compression_ratio` (bf16
+    → ~0.56×) while ``inflight_mb`` claims and the ``DeviceLedger``
+    still charge the *resident* footprint.  ``None`` (default) stages
+    full-width.
+
+    >>> LoaderSpec(sharded=True, mesh_shape=(4,), compress="int8").compress
+    'int8'
+    """
     prefetch: bool = True
     sharded: bool = False
     mesh_shape: Tuple[int, ...] = (8,)
     device_budget_mb: "Optional[float | Tuple[float, ...]]" = None
     migrate: bool = True
+    compress: Optional[str] = None
 
     def __post_init__(self):
         object.__setattr__(self, "mesh_shape", tuple(self.mesh_shape))
@@ -145,6 +167,10 @@ class LoaderSpec:
         if self.sharded and not (1 <= len(self.mesh_shape) <= 2):
             raise ValueError(
                 f"mesh_shape must be 1-D or 2-D, got {self.mesh_shape}")
+        if self.compress not in (None, "int8"):
+            raise ValueError(
+                f"unknown wire compression {self.compress!r} "
+                "(None or 'int8')")
 
 
 @dataclass(frozen=True)
@@ -314,6 +340,7 @@ def build_server(config: ServingConfig, cls=None):
                             if config.loader.sharded else None),
               device_budget_mb=config.loader.device_budget_mb,
               migrate=config.loader.migrate,
+              compress=config.loader.compress,
               fault=config.fault)
     ps = config.predictor
     for spec in config.tenants:

@@ -191,7 +191,10 @@ def drain_plan(state: "MemoryState", dead: int, *, now: float = 0.0
                 planned = (v, proj, placed)
         if planned is not None:
             v, proj, placed = planned
-            acts.append(A.Downgrade(app, v))
+            # A drain downgrade always targets a lower-bits sibling of
+            # the resident variant, so it requantizes in place — the
+            # degraded layout lands with zero bytes over the host link.
+            acts.append(A.downgrade_action(app, t.loaded, v))
             counters["downgrades"] += 1
             for d in range(n):
                 used[d] += proj[d] - cur[d]

@@ -911,6 +911,12 @@ class ServingEngine:
             shards = getattr(self.loader, "shards_landed", None)
             if shards is not None:
                 kw["shards_landed"] = shards
+            # Wire accounting (getattr: protocol fakes may predate it).
+            wire = getattr(self.loader, "wire_mb_staged", None)
+            if wire is not None:
+                kw["wire_mb_staged"] = wire
+                kw["inplace_downgrades"] = getattr(
+                    self.loader, "inplace_downgrades", 0)
         devices = st.devices
         if devices is not None:
             # Cross-device victim migrations (admission + loader paths;

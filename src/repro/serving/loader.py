@@ -69,6 +69,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core import actions as A
 from repro.core.model_zoo import ModelVariant
 from repro.core.policies import ProcurePlan
+from repro.distributed.compression import wire_compression_ratio
 
 INF = math.inf
 
@@ -126,11 +127,28 @@ class BackgroundLoader:
     ``stage_fn(app, variant_or_None)`` performs the physical move (the
     serving runtime passes ``TenantRuntime.set_variant``); accounting-only
     tests can omit it and exercise the charge lifecycle alone.
+
+    ``compress="int8"`` turns on quantize-on-the-wire staging: every
+    load ships the int8 payload + per-group scales host→chip and
+    dequantizes on land, so a load's *virtual transfer time* is
+    ``variant.load_ms ×``
+    :func:`~repro.distributed.compression.wire_compression_ratio` while
+    the in-flight claim and the committed weights still charge the
+    resident footprint (the bytes on the chip are full width after
+    dequantize).  ``wire_mb_staged`` counts the MB actually shipped
+    over the link; ``inplace_downgrades`` counts variant switches that
+    shipped *zero* bytes (``Downgrade(in_place=True)`` — resident
+    leaves requantized via the ``quant_matmul`` machinery).
     """
 
     def __init__(self, manager, stage_fn: Optional[
-            Callable[[str, Optional[ModelVariant]], None]] = None):
+            Callable[[str, Optional[ModelVariant]], None]] = None,
+            compress: Optional[str] = None):
+        if compress not in (None, "int8"):
+            raise ValueError(
+                f"unknown wire compression {compress!r} (None or 'int8')")
         self.manager = manager
+        self.compress = compress
         self._stage_fn = stage_fn or (lambda app, variant: None)
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="model-loader")
@@ -153,6 +171,32 @@ class BackgroundLoader:
         self.loads_committed = 0
         self.load_overlap_ms = 0.0
         self.fits_scheduled = 0  # background predictor fits enqueued
+        self.wire_mb_staged = 0.0  # MB actually shipped host→chip
+        self.inplace_downgrades = 0  # variant switches with zero wire MB
+
+    # -- quantize-on-the-wire staging -------------------------------------
+    def wire_ratio(self, variant: ModelVariant) -> float:
+        """Fraction of ``variant``'s full-width bytes a transfer ships
+        under this channel's compression scheme (1.0 when off)."""
+        if self.compress is None:
+            return 1.0
+        return wire_compression_ratio(variant.bits, scheme=self.compress)
+
+    def _wire_ms(self, variant: ModelVariant) -> float:
+        """Virtual host→chip transfer time: the zoo's measured load time
+        scaled by the wire ratio — same link, fewer bytes."""
+        return variant.load_ms * self.wire_ratio(variant)
+
+    def _count_stage(self, act: A.Action) -> None:
+        """Wire accounting for a residency action's physical move: an
+        in-place downgrade ships zero bytes (resident leaves are
+        requantized on-chip); everything else ships the variant's
+        compressed payload; an unload ships nothing."""
+        if isinstance(act, A.Downgrade) and act.in_place:
+            self.inplace_downgrades += 1
+        elif act.variant is not None:
+            self.wire_mb_staged += (act.variant.size_mb
+                                    * self.wire_ratio(act.variant))
 
     # -- physical staging channel ---------------------------------------
     def stage(self, app: str, variant: Optional[ModelVariant]) -> Future:
@@ -270,18 +314,21 @@ class BackgroundLoader:
         if isinstance(act, A.Load) and act.staged:
             ld = InflightLoad(
                 app=act.app, variant=act.variant, t_enqueue_ms=now_ms,
-                ready_ms=now_ms + act.variant.load_ms,
+                ready_ms=now_ms + self._wire_ms(act.variant),
                 charge_mb=act.claim_mb, demand=demand,
                 predicted_ms=predicted_ms,
                 future=self.stage(act.app, act.variant),
                 on_action=on_action)
             self.inflight[act.app] = ld
+            self.wire_mb_staged += (act.variant.size_mb
+                                    * self.wire_ratio(act.variant))
             if demand:
                 self.demand_loads += 1
             self._emit(now_ms, "demand" if demand else "prefetch",
                        act.app, act.claim_mb)
             return ld
         if isinstance(act, A.RESIDENCY_ACTIONS):
+            self._count_stage(act)
             self.stage(act.app, act.variant)
         if on_action is not None:
             on_action(act, now_ms)
@@ -311,7 +358,10 @@ class BackgroundLoader:
             ld.state = "committed"
             rec = LoadRecord(
                 app=app, bits=ld.variant.bits,
-                load_ms=ld.variant.load_ms,
+                # Wire time, not the zoo's full-width load_ms: with
+                # compression on, the transfer interval (and the
+                # overlap it can hide) really is shorter.
+                load_ms=ld.ready_ms - ld.t_enqueue_ms,
                 t_enqueue_ms=ld.t_enqueue_ms, t_ready_ms=ld.ready_ms,
                 demand=ld.demand)
             self._committed[app] = rec
@@ -369,8 +419,10 @@ class BackgroundLoader:
         ld.variant = variant
         ld.charge_mb = new_charge
         ld.t_enqueue_ms = now_ms
-        ld.ready_ms = now_ms + variant.load_ms
+        ld.ready_ms = now_ms + self._wire_ms(variant)
         ld.future = self.stage(app, variant)
+        self.wire_mb_staged += (variant.size_mb
+                                * self.wire_ratio(variant))
         self.prefetch_shrunk += 1
         self._emit(now_ms, "shrink", app, -freed)
         return ld

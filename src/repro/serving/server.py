@@ -212,6 +212,7 @@ class EdgeServer:
                  device_budget_mb: "Optional[float | Tuple[float, ...]]"
                  = None,
                  migrate: bool = True,
+                 compress: Optional[str] = None,
                  adaptive_delta: bool = False,
                  continuous: bool = False,
                  kv_page_mb: float = 0.0,
@@ -236,6 +237,11 @@ class EdgeServer:
                                                (tuple, list))
                                  else device_budget_mb)
         self.migrate = migrate
+        # Quantize-on-the-wire staging ("int8" or None): both loader
+        # channels ship compressed bytes host→chip and dequantize on
+        # land, shrinking every load's virtual transfer time by the
+        # wire ratio while residency accounting is unchanged.
+        self.compress = compress
         self.adaptive_delta = adaptive_delta
         # Continuous batching: requests join/leave the running decode
         # batch per step, and KV is charged page-granularly through a
@@ -331,10 +337,12 @@ class EdgeServer:
             self.loader = ShardedLoaderChannel(
                 self.manager,
                 n_devices=self.manager.state.devices.n_devices,
-                stage_fn=stage, migrate=self.migrate)
+                stage_fn=stage, migrate=self.migrate,
+                compress=self.compress)
             self._attach_physical_mesh()
         else:
-            self.loader = (BackgroundLoader(self.manager, stage_fn=stage)
+            self.loader = (BackgroundLoader(self.manager, stage_fn=stage,
+                                            compress=self.compress)
                            if self.prefetch else None)
         if self.loader is not None:
             # Admission-path migrations land in the same audit trail as

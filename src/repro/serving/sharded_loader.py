@@ -112,10 +112,11 @@ class ShardedLoaderChannel(BackgroundLoader):
                  shard_fn: Optional[Callable[
                      [str, ModelVariant], Tuple[float, ...]]] = None,
                  stage_shard_fn: Optional[ShardStageFn] = None,
-                 migrate: bool = True):
+                 migrate: bool = True,
+                 compress: Optional[str] = None):
         if n_devices < 1:
             raise ValueError(f"n_devices must be >= 1, got {n_devices}")
-        super().__init__(manager, stage_fn=stage_fn)
+        super().__init__(manager, stage_fn=stage_fn, compress=compress)
         self.n_devices = n_devices
         self.migrate = migrate
         self._shard_fn = shard_fn
@@ -177,11 +178,14 @@ class ShardedLoaderChannel(BackgroundLoader):
             shards_mb = self._split_mb(app, variant)
             cur_mb = self._split_mb(app, loaded)
         total = sum(shards_mb)
+        # Shared host link: the cumulative slots sum to exactly the
+        # *wire* transfer time (compressed bytes under compress="int8").
+        wire_ms = self._wire_ms(variant)
         out: List[ShardStage] = []
         t_cursor, global_left = now_ms, charge_mb
         for d, mb in enumerate(shards_mb):
             frac = mb / total if total else 0.0
-            ms = variant.load_ms * frac
+            ms = wire_ms * frac
             gmb = (global_left if d == self.n_devices - 1
                    else charge_mb * frac)
             global_left -= gmb
@@ -290,6 +294,8 @@ class ShardedLoaderChannel(BackgroundLoader):
                                   act.claim_mb, shards, demand=demand,
                                   predicted_ms=predicted_ms,
                                   on_action=on_action)
+            self.wire_mb_staged += (act.variant.size_mb
+                                    * self.wire_ratio(act.variant))
             if demand:
                 self.demand_loads += 1
             self._emit(now_ms, "demand" if demand else "prefetch",
@@ -354,7 +360,8 @@ class ShardedLoaderChannel(BackgroundLoader):
             ld.state = "committed"
             rec = LoadRecord(
                 app=app, bits=ld.variant.bits,
-                load_ms=ld.variant.load_ms,
+                # Sum of the shard slots = the wire transfer time.
+                load_ms=sum(sh.load_ms for sh in ld.shards),
                 t_enqueue_ms=ld.t_enqueue_ms, t_ready_ms=ld.ready_ms,
                 demand=ld.demand,
                 shard_intervals=tuple(
@@ -471,6 +478,8 @@ class ShardedLoaderChannel(BackgroundLoader):
                                   shards, demand=ld.demand,
                                   predicted_ms=ld.predicted_ms,
                                   on_action=ld.on_action)
+        self.wire_mb_staged += (variant.size_mb
+                                * self.wire_ratio(variant))
         self.prefetch_shrunk += 1
         self._emit(now_ms, "shrink", app, -(ld.charge_mb - new_charge))
         return new_ld

@@ -111,6 +111,11 @@ class ServingStats:
     load_overlap_ms: Optional[float] = None
     fits_scheduled: Optional[int] = None
     shards_landed: Optional[int] = None   # sharded loader only
+    # Quantize-on-the-wire staging: MB actually shipped host→chip (the
+    # compressed payload under LoaderSpec(compress="int8")) and variant
+    # switches that shipped zero bytes (in-place requantization).
+    wire_mb_staged: Optional[float] = None
+    inplace_downgrades: Optional[int] = None
 
     # --- device mesh -------------------------------------------------
     shards_migrated: Optional[int] = None

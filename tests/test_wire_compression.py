@@ -1,0 +1,230 @@
+"""Quantize-on-the-wire staging + in-place downgrade tests: the wire
+ratio math, compressed loads shrinking transfer *time* while claims and
+ledgers still charge the *resident* footprint, cancel-mid-compressed-load
+releasing exactly the landed shards' resident MB, the in-place
+``Downgrade`` shipping zero bytes through the loader channel, and an
+in-place plan failing mid-sequence rolling back with no ledger drift.
+
+Synthetic zoos drive the manager + channels directly (no models), the
+same idiom as test_sharded_loader.py.
+"""
+import pytest
+
+from repro.core import EdgeMultiAI
+from repro.core import actions as A
+from repro.core.memory_state import DeviceLedger
+from repro.core.model_zoo import ModelVariant, ModelZoo
+from repro.distributed import sharding as SH
+from repro.distributed.compression import wire_compression_ratio
+from repro.serving.api import LoaderSpec, ServingConfig, TenantSpec
+from repro.serving.loader import BackgroundLoader
+from repro.serving.sharded_loader import ShardedLoaderChannel
+
+N_DEV = 4
+
+
+def _zoo(name, sizes):
+    return ModelZoo(app_name=name, variants=tuple(
+        ModelVariant(f"{name}-{i}", bits=32 >> i, size_mb=s,
+                     accuracy=90.0 - 10 * i, load_ms=s * 2)
+        for i, s in enumerate(sizes)))
+
+
+def make_manager(budget_mb=1000.0, devices=True, **zoos):
+    zoos = zoos or {"a": _zoo("a", [500, 300]), "b": _zoo("b", [400, 200])}
+    mgr = EdgeMultiAI(zoos, budget_mb=budget_mb, policy="iws-bfe",
+                      delta_ms=10.0)
+    if devices:
+        mgr.state.devices = DeviceLedger(
+            (budget_mb / N_DEV,) * N_DEV,
+            split_fn=lambda app, v: SH.variant_shard_mb(v.size_mb, N_DEV))
+    return mgr
+
+
+# ---------------------------------------------------------------------------
+# The wire ratio itself
+# ---------------------------------------------------------------------------
+def test_wire_compression_ratio_values():
+    # int8 payload (1 B/elem) + one f32 scale per group of 32 elems,
+    # against bits/8 resident bytes per element.
+    assert wire_compression_ratio(32) == pytest.approx(1.125 / 4)
+    assert wire_compression_ratio(16) == pytest.approx(0.5625)
+    # Already at (or below) the wire width: clamped — compression must
+    # never make a transfer *slower*.
+    assert wire_compression_ratio(8) == 1.0
+    assert wire_compression_ratio(4) == 1.0
+    # Coarser groups ship fewer scale bytes.
+    assert wire_compression_ratio(16, group=128) < \
+        wire_compression_ratio(16, group=32)
+    with pytest.raises(ValueError):
+        wire_compression_ratio(16, scheme="gzip")
+
+
+def test_loader_compress_validation():
+    mgr = make_manager(devices=False)
+    with pytest.raises(ValueError):
+        BackgroundLoader(mgr, compress="gzip")
+    with pytest.raises(ValueError):
+        LoaderSpec(compress="gzip")
+    spec = LoaderSpec(sharded=True, mesh_shape=(4,), compress="int8")
+    cfg = ServingConfig(tenants=(TenantSpec("tinyllama-1.1b"),),
+                        loader=spec, executor="sim")
+    assert ServingConfig.from_dict(cfg.to_dict()).loader == spec
+
+
+# ---------------------------------------------------------------------------
+# Compressed staging: wire time shrinks, resident accounting does not
+# ---------------------------------------------------------------------------
+def test_compressed_load_shrinks_wire_time_not_claims():
+    mgr = make_manager(devices=False)
+    loader = BackgroundLoader(mgr, compress="int8")
+    ratio = wire_compression_ratio(32)  # "a-0" is the 32-bit variant
+    ld = loader.enqueue(mgr.plan_demand("a", 0.0), now_ms=0.0, demand=True)
+    assert ld is not None and ld.variant.bits == 32
+    # The claim is the *resident* footprint — the chip holds full-width
+    # weights after dequantize-on-land.
+    assert mgr.state.inflight_mb == 500.0
+    # The transfer is the *wire* time — fewer bytes through the link.
+    assert ld.ready_ms == pytest.approx(1000.0 * ratio)
+    # Nothing commits before the (shorter) wire window closes...
+    assert loader.reap(1000.0 * ratio - 1.0) == []
+    recs = loader.reap(1000.0 * ratio)
+    assert [r.app for r in recs] == ["a"]
+    assert recs[0].load_ms == pytest.approx(1000.0 * ratio)
+    assert loader.wire_mb_staged == pytest.approx(500.0 * ratio)
+    # ...and the committed weights charge full width.
+    assert mgr.state.tenants["a"].loaded.size_mb == 500.0
+    loader.close()
+
+
+def test_compressed_sharded_slots_tile_the_wire_time():
+    mgr = make_manager()
+    loader = ShardedLoaderChannel(mgr, n_devices=N_DEV, compress="int8")
+    ratio = wire_compression_ratio(32)
+    ld = loader.enqueue(mgr.plan_demand("a", 0.0), 0.0, demand=True)
+    wire_ms = 1000.0 * ratio
+    assert [s.load_ms for s in ld.shards] == \
+        pytest.approx([wire_ms / N_DEV] * N_DEV)
+    assert ld.ready_ms == pytest.approx(wire_ms)
+    # Per-chip claims are the resident shard MB, not the wire MB.
+    assert mgr.state.devices.inflight["a"] == pytest.approx([125.0] * N_DEV)
+    recs = loader.reap(wire_ms)
+    assert recs[0].load_ms == pytest.approx(wire_ms)
+    assert mgr.state.devices.weights["a"] == pytest.approx([125.0] * N_DEV)
+    loader.close()
+
+
+def test_cancel_mid_compressed_load_releases_resident_mb():
+    """Cancelling a compressed sharded load releases exactly the landed
+    shards' *resident* claims (125MB per chip), not the smaller wire MB
+    — and the partial overlap credit is the landed shards' wire time."""
+    mgr = make_manager()
+    loader = ShardedLoaderChannel(mgr, n_devices=N_DEV, compress="int8")
+    loader.enqueue(mgr.plan_proactive("a", 0.0), 0.0, predicted_ms=900.0)
+    ratio = wire_compression_ratio(32)
+    slot_ms = 1000.0 * ratio / N_DEV  # 70.3125
+    led = mgr.state.devices
+    released = []
+    orig = led.release_inflight_shard
+
+    def spy(app, device, mb):
+        released.append((device, mb))
+        orig(app, device, mb)
+
+    led.release_inflight_shard = spy
+    # Two wire slots have passed; cancel mid-flight.
+    loader.reap(2.5 * slot_ms)
+    assert loader.shards_landed == 2
+    ld = loader.cancel("a", 2.5 * slot_ms)
+    assert ld is not None
+    assert [d for d, _ in released] == list(range(N_DEV))
+    assert all(mb == pytest.approx(125.0) for _, mb in released), \
+        "released claims are resident shard MB, not wire MB"
+    assert mgr.state.inflight_mb == 0.0
+    assert led.inflight == {}
+    led.check_invariant()
+    recs = loader.reap(2.5 * slot_ms)
+    assert len(recs) == 1 and recs[0].partial
+    assert recs[0].load_ms == pytest.approx(2 * slot_ms), \
+        "overlap credit = the landed shards' wire slots"
+    loader.close()
+
+
+# ---------------------------------------------------------------------------
+# In-place downgrades: zero bytes over the link
+# ---------------------------------------------------------------------------
+def test_downgrade_action_prefers_in_place():
+    zoo = _zoo("a", [500, 300])
+    big, small = zoo.variants
+    assert A.downgrade_action("a", big, small).in_place
+    assert not A.downgrade_action("a", None, small).in_place
+    assert not A.downgrade_action("a", small, small).in_place
+    acts = A.eviction_actions([A.Eviction("a", big, small),
+                               A.Eviction("b", big, None)])
+    assert isinstance(acts[0], A.Downgrade) and acts[0].in_place
+    assert isinstance(acts[1], A.Unload)
+
+
+def test_inplace_downgrade_stages_zero_wire_bytes():
+    """The acceptance-criterion test: an in-place ``Downgrade`` enacted
+    through the loader channel moves zero bytes over the host link."""
+    mgr = make_manager()
+    loader = ShardedLoaderChannel(mgr, n_devices=N_DEV, compress="int8")
+    big, small = mgr.state.tenants["a"].zoo.variants
+    mgr.state.apply(A.plan_of(A.Load("a", big)))
+    assert loader.execute(
+        A.plan_of(A.downgrade_action("a", big, small)), 0.0) is None
+    assert loader.wire_mb_staged == 0.0, "zero bytes staged over the wire"
+    assert loader.inplace_downgrades == 1
+    assert mgr.state.tenants["a"].loaded is small
+    led = mgr.state.devices
+    assert led.weights["a"] == pytest.approx([small.size_mb / N_DEV] * N_DEV)
+    led.check_invariant()
+    # The same downgrade *not* in place ships the compressed payload.
+    mgr2 = make_manager()
+    loader2 = ShardedLoaderChannel(mgr2, n_devices=N_DEV, compress="int8")
+    mgr2.state.apply(A.plan_of(A.Load("a", big)))
+    loader2.execute(A.plan_of(A.Downgrade("a", small)), 0.0)
+    assert loader2.wire_mb_staged == pytest.approx(
+        small.size_mb * wire_compression_ratio(small.bits))
+    assert loader2.inplace_downgrades == 0
+    loader.close()
+    loader2.close()
+
+
+def test_inplace_downgrade_validation():
+    mgr = make_manager()
+    big, small = mgr.state.tenants["a"].zoo.variants
+    # Nothing resident: no leaves to requantize.
+    with pytest.raises(A.PlanError):
+        mgr.state.apply(A.plan_of(A.Downgrade("a", small, in_place=True)))
+    # Not strictly lower-bits: int8->int8 (or back up) is not derivable.
+    mgr.state.apply(A.plan_of(A.Load("a", small)))
+    with pytest.raises(A.PlanError):
+        mgr.state.apply(A.plan_of(A.Downgrade("a", small, in_place=True)))
+    assert mgr.state.tenants["a"].loaded is small
+
+
+def test_inplace_downgrade_plan_rolls_back_without_ledger_drift():
+    """An in-place downgrade in a plan whose *later* action fails must
+    roll back whole: the original variant stays resident and the ledger
+    shows no drift."""
+    mgr = make_manager()
+    big_a, small_a = mgr.state.tenants["a"].zoo.variants
+    _, small_b = mgr.state.tenants["b"].zoo.variants
+    mgr.state.apply(A.plan_of(A.Load("a", big_a)))
+    led = mgr.state.devices
+    weights_before = {app: list(w) for app, w in led.weights.items()}
+    free_before = mgr.state.free_mb
+    # Action 2 fails: "b" has nothing resident to requantize in place.
+    with pytest.raises(A.PlanError):
+        mgr.state.apply(A.plan_of(
+            A.Downgrade("a", small_a, in_place=True),
+            A.Downgrade("b", small_b, in_place=True)))
+    assert mgr.state.tenants["a"].loaded is big_a, \
+        "the already-applied in-place downgrade rolled back"
+    assert {app: list(w) for app, w in led.weights.items()} == \
+        weights_before
+    assert mgr.state.free_mb == pytest.approx(free_before)
+    assert mgr.state.inflight_mb == 0.0
+    led.check_invariant()

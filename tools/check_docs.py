@@ -1,0 +1,156 @@
+"""Docs-drift gate: the README must stay runnable and the docs must
+only name symbols that exist.
+
+Two checks, wired into the CI ``lint`` job:
+
+1. **Quickstart executes.**  The first fenced ``python`` block in
+   ``README.md`` is run as a subprocess (``PYTHONPATH=src``, under a
+   timeout).  A README whose 30-second example no longer runs is worse
+   than no README.
+
+2. **Named symbols resolve.**  Every backticked dotted path starting
+   with ``repro.`` or ``benchmarks.`` in ``README.md`` and ``docs/*.md``
+   is resolved by importing the longest module prefix and walking the
+   rest with ``getattr``; every backticked ``ClassName.field`` /
+   ``ClassName(field=...)`` reference whose class lives in the public
+   config surface is checked against the real dataclass fields.  Rename
+   a config field without updating the docs and this fails.
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# The docs name repo-root packages (benchmarks.*) and src ones (repro.*).
+for p in (REPO, os.path.join(REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+# The public config surface: backticked `ClassName.x` / `ClassName(x=1)`
+# docs references are validated against these classes' real attributes.
+PUBLIC_CLASSES = {
+    "ServingConfig": "repro.serving.api",
+    "TenantSpec": "repro.serving.api",
+    "BatchingSpec": "repro.serving.api",
+    "LoaderSpec": "repro.serving.api",
+    "PredictorSpec": "repro.serving.api",
+    "FaultSpec": "repro.serving.elastic",
+    "ClusterConfig": "repro.cluster.config",
+    "RouterSpec": "repro.cluster.config",
+    "ServingStats": "repro.serving.stats",
+    "ResidencyPlan": "repro.core.actions",
+    "Downgrade": "repro.core.actions",
+    "Load": "repro.core.actions",
+    "MemoryState": "repro.core.memory_state",
+}
+
+DOTTED = re.compile(r"`(?:~?)((?:repro|benchmarks)(?:\.[A-Za-z_]\w*)+)")
+CLASS_REF = re.compile(r"`([A-Z]\w+)(?:\.(\w+)|\((\w+)=)")
+
+
+def doc_files() -> list:
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return out
+
+
+def resolve_dotted(path: str) -> str | None:
+    """Import the longest module prefix, getattr the rest; an error
+    string on failure, None when the path resolves."""
+    parts = path.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError as e:
+            return str(e)
+        return None
+    return f"no importable prefix of {path!r}"
+
+
+def check_symbols() -> list:
+    failures = []
+    classes = {}
+    for name, modname in PUBLIC_CLASSES.items():
+        classes[name] = getattr(importlib.import_module(modname), name)
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path) as fh:
+            text = fh.read()
+        for m in DOTTED.finditer(text):
+            err = resolve_dotted(m.group(1))
+            if err is not None:
+                failures.append(f"{rel}: `{m.group(1)}` — {err}")
+        for m in CLASS_REF.finditer(text):
+            cls_name, attr = m.group(1), m.group(2) or m.group(3)
+            cls = classes.get(cls_name)
+            if cls is None or attr is None:
+                continue  # not part of the checked surface
+            known = ({f.name for f in dataclasses.fields(cls)}
+                     if dataclasses.is_dataclass(cls) else set())
+            if attr not in known and not hasattr(cls, attr):
+                failures.append(
+                    f"{rel}: `{cls_name}.{attr}` — {cls_name} has no "
+                    f"field or attribute {attr!r}")
+    return failures
+
+
+def quickstart_block() -> str | None:
+    with open(os.path.join(REPO, "README.md")) as fh:
+        text = fh.read()
+    m = re.search(r"```python\n(.*?)```", text, re.DOTALL)
+    return m.group(1) if m else None
+
+
+def check_quickstart(timeout_s: float = 240.0) -> list:
+    code = quickstart_block()
+    if code is None:
+        return ["README.md: no fenced python quickstart block found"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    try:
+        proc = subprocess.run([sys.executable, "-"], input=code,
+                              capture_output=True, text=True,
+                              timeout=timeout_s, env=env, cwd=REPO)
+    except subprocess.TimeoutExpired:
+        return [f"README quickstart: timed out after {timeout_s:.0f}s"]
+    if proc.returncode != 0:
+        tail = proc.stderr.strip().splitlines()[-12:]
+        return ["README quickstart: exited "
+                f"{proc.returncode}:\n  " + "\n  ".join(tail)]
+    print(f"README quickstart ran: {proc.stdout.strip()}")
+    return []
+
+
+def main() -> int:
+    failures = check_symbols()
+    failures += check_quickstart()
+    if failures:
+        print("\ndocs-drift gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    n_files = len(doc_files())
+    print(f"docs-drift gate passed ({n_files} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
