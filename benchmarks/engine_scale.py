@@ -1,0 +1,113 @@
+"""Engine-scale benchmark: a 10^5-request workload-zoo replay through
+the fast-path serving engine.
+
+The workload is the zoo generator's mixed stream — diurnal
+(sinusoidal-rate) Poisson arrivals for four tenants plus a flash crowd
+on the first — materialized by the vectorized trace builder
+(:func:`repro.serving.fast_trace_from_workload`; the sim executor reads
+only prompt *lengths*, so prompt arrays are pooled).  The engine runs
+continuous batching on sim executors with ``audit="counters"`` and the
+indexed scheduler: loader readiness answered from the lazy-deletion
+heap, prediction triggers memoized per ``(history, fits, last_time)``
+generation, load overlap folded online instead of rescanned at reap,
+per-event snapshots skipped.  Predictor background fits are disabled
+(``min_fit_samples`` past the trace) so the replay measures the engine
+loop, not RNN training.
+
+Two rows:
+
+* ``perf/engine/replay_rps`` — full-scale requests/sec of wall clock.
+  The detail carries the A/B on a smaller shared trace: the same
+  workload replayed by this engine and by the retained pre-refactor
+  reference path (``scheduler="linear"``, ``audit="full"`` — the exact
+  per-step rescans the old engine ran), whose bit-identical results the
+  equivalence suite asserts.  ``speedup`` is indexed/linear on that
+  shared trace.
+* ``perf/engine/events_per_sec`` — engine events processed per wall
+  second on the full-scale replay (``events_emitted`` spans submits,
+  commits, retirements, faults — the event-loop's actual tick rate).
+
+Env knobs for CI sizing: ``ENGINE_SCALE_N`` (total requests, default
+100000), ``ENGINE_SCALE_BASELINE_N`` (A/B trace size, default 12000 —
+large enough that the reference path's per-pass history rescans carry
+their real asymptotic weight, small enough to finish in CI time).
+
+    PYTHONPATH=src python -m benchmarks.run engine_scale
+"""
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core.simulator import generate_zoo
+from repro.serving import fast_trace_from_workload
+from repro.serving.api import (BatchingSpec, EdgeServer, PredictorSpec,
+                               ServingConfig, TenantSpec)
+
+TENANTS = ["tinyllama-1.1b", "mamba2-780m", "gemma2-2b", "hymba-1.5b"]
+MEAN_IAT_MS = 6.0
+MAX_NEW = 6
+
+
+def _trace(n_total: int):
+    """The mixed zoo stream at ``n_total`` requests: diurnal baseline
+    per tenant, one unpredicted flash crowd on the first."""
+    per_app = max(n_total // (len(TENANTS) + 1), 1)
+    burst = n_total - per_app * len(TENANTS)
+    wl = generate_zoo(TENANTS, requests_per_app=per_app,
+                      mean_iat_ms=MEAN_IAT_MS, amplitude=0.6,
+                      burst_requests=burst, burst_iat_ms=0.5, seed=3)
+    return wl
+
+
+def _run(trace, scheduler: str, audit: str):
+    """One engine replay; returns (stats dict, wall seconds, events)."""
+    srv = EdgeServer.build(ServingConfig(
+        tenants=tuple(TenantSpec(n) for n in TENANTS),
+        executor="sim",
+        policy="iws-bfe",
+        delta_ms=750.0,
+        batching=BatchingSpec(max_batch=8, window_ms=20.0,
+                              continuous=True),
+        # Fits off: the replay measures the engine loop, not the RNN's
+        # background training schedule.
+        predictor=PredictorSpec(min_fit_samples=10**9),
+        kv_headroom_shape=(2, 12),
+        audit=audit, scheduler=scheduler))
+    cfgs = {t.name: t.cfg for t in srv.tenants.values()}
+    reqs = fast_trace_from_workload(trace, cfgs, seed=1, max_new=MAX_NEW)
+    t0 = time.perf_counter()
+    stats = srv.engine.run_trace(reqs)
+    wall = time.perf_counter() - t0
+    events = srv.engine.events_emitted
+    srv.close()
+    return stats.to_dict(), wall, events
+
+
+def run() -> None:
+    n_total = int(os.environ.get("ENGINE_SCALE_N", "100000"))
+    n_base = int(os.environ.get("ENGINE_SCALE_BASELINE_N", "12000"))
+    # The A/B: one shared smaller trace through both paths — the linear
+    # reference rescans per step (quadratic in history/loads), so it is
+    # measured at a size it finishes in CI time.
+    small = _trace(n_base)
+    fast_small, fast_small_wall, _ = _run(small, "indexed", "counters")
+    lin_small, lin_wall, _ = _run(small, "linear", "full")
+    fast_rps_small = fast_small["requests"] / fast_small_wall
+    lin_rps = lin_small["requests"] / lin_wall
+    speedup = fast_rps_small / lin_rps
+    # Full scale, fast path only.
+    full = _trace(n_total)
+    stats, wall, events = _run(full, "indexed", "counters")
+    rps = stats["requests"] / wall
+    emit("perf/engine/replay_rps", rps,
+         f"n={stats['requests']} wall={wall:.2f}s "
+         f"warm={stats['warm_ratio']:.3f} "
+         f"speedup={speedup:.1f}x (indexed={fast_rps_small:.0f}rps "
+         f"linear={lin_rps:.0f}rps n={lin_small['requests']})")
+    emit("perf/engine/events_per_sec", events / wall,
+         f"events={events} wall={wall:.2f}s audit=counters "
+         f"replay_rps={rps:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -14,9 +14,10 @@ import re
 import sys
 import traceback
 
-from benchmarks import (fig4_multitenancy, fig5_6_8_policies, fig7_pareto,
-                        fig9_10_fairness, perf_compare, quant_fidelity,
-                        roofline, serving_throughput, table1_load_vs_infer)
+from benchmarks import (engine_scale, fig4_multitenancy, fig5_6_8_policies,
+                        fig7_pareto, fig9_10_fairness, perf_compare,
+                        quant_fidelity, roofline, serving_throughput,
+                        table1_load_vs_infer)
 
 MODULES = {
     "table1_load_vs_infer": table1_load_vs_infer,
@@ -26,6 +27,7 @@ MODULES = {
     "fig9_10_fairness": fig9_10_fairness,
     "quant_fidelity": quant_fidelity,
     "serving_throughput": serving_throughput,
+    "engine_scale": engine_scale,
     "roofline": roofline,
     "perf_compare": perf_compare,
 }

@@ -170,6 +170,21 @@ def _skewed_budgets(srv: EdgeServer, n: int = 8, tight: float = 0.7,
 
 PAGED_TENANTS = ["tinyllama-1.1b", "mamba2-780m"]
 
+# The elastic A/B's deterministic schedule; the seed sweep reuses it
+# with ``prob`` armed, so each injector seed decides which scheduled
+# downs actually fire.
+FAULT_SCHEDULE = FaultSpec(events=((3000.0, 3, "down"), (9000.0, 3, "up")))
+FAULT_SWEEP_PROB = 0.7
+FAULT_SWEEP_SEEDS = range(8)
+# The seed sweep's harsher script: a cascading two-chip loss with late
+# recovery.  A single-chip loss is fully absorbed by the drain planner
+# (zero warm dip on every seed); losing a second chip mid-recovery is
+# what actually costs warm starts, so the sweep's p95 captures the
+# tail of *which* scheduled downs the injector seed lets fire.
+FAULT_SWEEP_SCHEDULE = FaultSpec(
+    events=((1500.0, 3, "down"), (4000.0, 2, "down"), (9000.0, 3, "up")),
+    prob=FAULT_SWEEP_PROB)
+
 
 def _run_paged(continuous: bool):
     """One sim-executor run of the KV-contention trace: the derived
@@ -387,8 +402,7 @@ def run() -> None:
     # warm ratio must hold against the undisturbed run (the drain plan
     # rehomes shards instead of cold-starting tenants) and the detail
     # carries the loss/recovery counters.
-    faulted = _run_elastic(FaultSpec(
-        events=((3000.0, 3, "down"), (9000.0, 3, "up"))))
+    faulted = _run_elastic(FAULT_SCHEDULE)
     clean = _run_elastic(None)
     emit("serving/elastic/warm_ratio", faulted["warm_ratio"],
          f"no_fault={clean['warm_ratio']:.3f} "
@@ -397,6 +411,21 @@ def run() -> None:
          f"drain_migrations={faulted['drain_migrations']} "
          f"drain_downgrades={faulted['drain_downgrades']} "
          f"kv_rejections={faulted['kv_rejections']}")
+    # The seed sweep: the same schedule with stochastic downs
+    # (prob=0.7) across 8 injector seeds — one deterministic point
+    # estimate says little about fault cost, so the row is the p95 of
+    # the warm-ratio dip (clean − faulted) over the sweep, each seed a
+    # bit-reproducible run on its own counter-based (seed, step)
+    # stream.  Ungated: the dip's tail is reported context, the
+    # deterministic warm_ratio row above is what gates.
+    dips, per_seed = [], []
+    for s in FAULT_SWEEP_SEEDS:
+        swept = _run_elastic(FAULT_SWEEP_SCHEDULE.with_seed(s))
+        dips.append(clean["warm_ratio"] - swept["warm_ratio"])
+        per_seed.append(f"s{s}={swept['warm_ratio']:.3f}")
+    emit("serving/elastic/p95_warm_dip", float(np.percentile(dips, 95)),
+         f"clean={clean['warm_ratio']:.3f} prob={FAULT_SWEEP_PROB} "
+         f"seeds={len(dips)} " + " ".join(per_seed))
     # The cluster A/B: same flash-crowd trace over the same 3-server
     # fleet, warm-aware routing vs round-robin.  Warm-aware reads only
     # the typed ServerView surface (residency/staging accuracy, queue

@@ -82,7 +82,7 @@ class EdgeCluster:
         return ServerView(
             index=i, pending=eng.batcher.pending(),
             served=len(eng.results),
-            warm=sum(1 for r in eng.results if r.warm),
+            warm=eng.warm_served,
             queued=queued, resident=resident, staging=staging)
 
     def views(self) -> Tuple[ServerView, ...]:
@@ -100,13 +100,23 @@ class EdgeCluster:
             if r.rid is None:
                 r.rid = i
         engines = [srv.engine for srv in self.servers]
+        # Next-internal-event cache: only servers whose next event
+        # precedes the routing horizon advance.  ``cluster_advance`` is
+        # a strict no-op when nothing precedes the horizon (its loop
+        # breaks before any state moves), so the skip is bit-exact;
+        # anything that mutates a server through routing — a submit, a
+        # hand-off's donor/receiver — invalidates that entry.
+        nxt = [-math.inf] * len(engines)
         for r in pending:
             t = r.arrival_ms
-            for eng in engines:
-                eng.cluster_advance(t)
+            for i, eng in enumerate(engines):
+                if nxt[i] < t:
+                    nxt[i] = eng.cluster_advance(t)
             views = self.views()
-            target = self.router.route(r.app, views, t)
-            target = self._maybe_handoff(r.app, target, views, t)
+            routed = self.router.route(r.app, views, t)
+            target = self._maybe_handoff(r.app, routed, views, t)
+            if target != routed:  # hand-off moved state on both ends
+                nxt[routed] = nxt[target] = -math.inf
             self.routed += 1
             v = self.view(target)  # fresh: a hand-off just moved state
             if (r.app not in v.resident and r.app not in v.staging
@@ -114,6 +124,7 @@ class EdgeCluster:
                             for w in views if w.index != target)):
                 self.spilled += 1
             engines[target].cluster_submit(r)
+            nxt[target] = -math.inf
         # Drain: keep advancing on the shared clock until every server
         # reports no further internal events.
         while True:

@@ -21,7 +21,7 @@ from repro.core.policies import (BatchAware, DemandContext,
                                  resolve_policy)
 from repro.core.predictor import MemoryPredictor, RequestPredictor
 from repro.core.simulator import (SimResult, Workload, generate_workload,
-                                  simulate, sweep_policies)
+                                  generate_zoo, simulate, sweep_policies)
 
 __all__ = [
     "BatchAdmission", "EdgeMultiAI", "InferenceRecord", "Metrics",
@@ -35,5 +35,5 @@ __all__ = [
     "FallbackPolicy", "available_policies", "register_policy",
     "resolve_policy",
     "MemoryPredictor", "RequestPredictor", "SimResult", "Workload",
-    "generate_workload", "simulate", "sweep_policies",
+    "generate_workload", "generate_zoo", "simulate", "sweep_policies",
 ]

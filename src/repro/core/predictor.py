@@ -97,6 +97,9 @@ class SeriesPredictor:
         self.losses: Optional[np.ndarray] = None
         self.fits = 0  # completed fit() calls
         self._fit_len = 0  # history length at the last completed fit
+        # Pre-refactor reference cost model: materialize the whole
+        # history per predict() (see predict's comment).
+        self.full_history_predict = False
 
     def observe(self, value: float) -> None:
         self.history.append(float(value))
@@ -142,7 +145,19 @@ class SeriesPredictor:
         weights are random, so the running mean of the context *is* the
         prediction — the same fallback used while history is short.
         """
-        h = np.asarray(self.history, np.float32)
+        # Only the trailing context is ever read, so only it is
+        # materialized — the history list grows unboundedly under the
+        # serving engine, and converting all of it per call would make
+        # each prediction O(history).  Bit-identical: the slice holds
+        # the same elements the full-array path reads, so either branch
+        # returns the same floats.  ``full_history_predict`` keeps the
+        # pre-refactor O(history) materialization — the serving
+        # engine's ``scheduler="linear"`` reference path sets it so the
+        # fast-path A/B measures against a cost-faithful baseline.
+        if self.full_history_predict:
+            h = np.asarray(self.history, np.float32)
+        else:
+            h = np.asarray(self.history[-self.context:], np.float32)
         if len(h) < self.context:
             return float(np.mean(h)) if len(h) else self.mean
         ctx = h[-self.context:]

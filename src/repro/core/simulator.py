@@ -204,6 +204,86 @@ def generate_diurnal(
                      pred_iats, mean_iat_ms, deviation)
 
 
+def generate_zoo(
+    apps: List[str],
+    *,
+    requests_per_app: int = 60,
+    mean_iat_ms: float = 8000.0,
+    period_ms: Optional[float] = None,
+    amplitude: float = 0.5,
+    burst_app: Optional[str] = None,
+    burst_at_ms: Optional[float] = None,
+    burst_requests: int = 0,
+    burst_iat_ms: float = 100.0,
+    deviation: float = 0.3,
+    seed: int = 0,
+) -> Workload:
+    """Vectorized workload zoo: diurnal (sinusoidal-rate) Poisson
+    arrivals for every tenant plus an optional flash crowd on one — the
+    mixed stream large-scale engine replays use.  All draws are batched
+    numpy calls, so a 10^5-request trace materializes in milliseconds
+    instead of the per-arrival python loops of
+    :func:`generate_diurnal` / :func:`generate_flash_crowd` (whose
+    seeded draw orders are contractual and therefore untouched).
+
+    Draw-order contract (seeded, per app in ``apps`` order): rounds of
+    one ``rng.exponential(1/λmax, K)`` batch then one ``rng.random(K)``
+    batch until ``requests_per_app`` thinned arrivals accumulate; then
+    one ``rng.random(n)`` batch and one ``rng.normal(0, σ, n)`` batch
+    for the prediction protocol (jitter is drawn for every arrival and
+    masked, unlike the scalar generators' draw-per-kept); finally, for
+    the burst tenant, one ``rng.exponential(burst_iat_ms,
+    burst_requests)`` batch.  Like :func:`generate_flash_crowd`, burst
+    arrivals never enter the predicted stream.
+    """
+    if not 0.0 <= amplitude < 1.0:
+        raise ValueError(f"amplitude must be in [0, 1), got {amplitude}")
+    period = period_ms if period_ms is not None else 20.0 * mean_iat_ms
+    target = burst_app if burst_app is not None else apps[0]
+    if burst_requests and target not in apps:
+        raise ValueError(f"burst_app {target!r} not in apps")
+    start = (burst_at_ms if burst_at_ms is not None
+             else 0.25 * requests_per_app * mean_iat_ms)
+    rng = np.random.default_rng(seed)
+    lam_max = (1.0 + amplitude) / mean_iat_ms
+    # Candidate batch sized so one round almost always suffices: the
+    # thinning acceptance rate averages 1/(1+amplitude).
+    batch = int(requests_per_app * (1.0 + amplitude) * 1.25) + 16
+    requests: List[Tuple[float, str]] = []
+    predictions: Dict[str, List[float]] = {}
+    residuals: List[float] = []
+    actual_iats: List[float] = []
+    pred_iats: List[float] = []
+    for a in apps:
+        kept = np.empty(0)
+        t0 = 0.0
+        while kept.size < requests_per_app:
+            cand = t0 + np.cumsum(rng.exponential(1.0 / lam_max, batch))
+            lam = (1.0 + amplitude * np.sin(2.0 * np.pi * cand / period)
+                   ) / mean_iat_ms
+            kept = np.concatenate(
+                [kept, cand[rng.random(batch) < lam / lam_max]])
+            t0 = float(cand[-1])
+        times = kept[:requests_per_app]
+        actual_iats += list(np.diff(times, prepend=0.0))
+        # Vectorized prediction protocol: drop w.p. deviation/2, jitter
+        # the survivors by N(0, deviation·mean_iat).
+        keep = rng.random(times.size) >= deviation / 2
+        jitter = rng.normal(0.0, deviation * mean_iat_ms, times.size)
+        preds = np.sort((times + jitter)[keep])
+        residuals += list(np.abs(jitter[keep]))
+        predictions[a] = [float(p) for p in preds]
+        pred_iats += list(np.diff(preds))
+        if burst_requests and a == target:
+            bgaps = rng.exponential(burst_iat_ms, burst_requests)
+            times = np.sort(np.concatenate(
+                [times, start + np.cumsum(bgaps)]))
+            actual_iats += list(bgaps)
+        requests += [(float(t), a) for t in times]
+    return _finalize(requests, predictions, residuals, actual_iats,
+                     pred_iats, mean_iat_ms, deviation)
+
+
 def _kl_divergence(p_samples: np.ndarray, q_samples: np.ndarray,
                    bins: int = 30) -> float:
     """Histogram KL(actual ‖ predicted) over inter-arrival distributions."""

@@ -4,8 +4,8 @@ from repro.serving.api import (BatchingSpec, FaultSpec, LoaderSpec,
 from repro.serving.batcher import Batch, Batcher, Request
 from repro.serving.engine import (EngineEvent, LoaderChannel, RequestResult,
                                   ServingEngine, ServingHost, TenantExecutor,
-                                  kv_cache_mb, poisson_trace,
-                                  trace_from_workload)
+                                  fast_trace_from_workload, kv_cache_mb,
+                                  poisson_trace, trace_from_workload)
 from repro.serving.loader import BackgroundLoader, InflightLoad, LoadRecord
 from repro.serving.server import EdgeServer, ServeResult, TenantRuntime
 from repro.serving.sharded_loader import (ShardedInflightLoad,
@@ -15,7 +15,8 @@ from repro.serving.stats import AuditEvent, EventKind, ServingStats
 __all__ = ["Batch", "Batcher", "Request", "EdgeServer",
            "ServeResult", "TenantRuntime", "ServingEngine", "RequestResult",
            "EngineEvent", "kv_cache_mb", "poisson_trace",
-           "trace_from_workload", "BackgroundLoader", "InflightLoad",
+           "trace_from_workload", "fast_trace_from_workload",
+           "BackgroundLoader", "InflightLoad",
            "LoadRecord", "ServingConfig", "TenantSpec", "PredictorSpec",
            "BatchingSpec", "LoaderSpec", "FaultSpec", "SimTenant",
            "build_server", "ServingStats", "AuditEvent", "EventKind",

@@ -214,10 +214,28 @@ class ServingConfig:
     # Requires LoaderSpec(sharded=True) — the drain planner works the
     # per-device ledger.
     fault: Optional[FaultSpec] = None
+    # Audit level: "full" (default) records per-event usage/device
+    # snapshots — what the invariant tests replay; "counters" keeps
+    # only event counts, for large-scale replays where the snapshots
+    # dominate the hot path.
+    audit: str = "full"
+    # Event scheduling: "indexed" (default) answers idle wake-ups from
+    # incremental structures (loader readiness heap, memoized prediction
+    # triggers, online overlap accounting); "linear" is the retained
+    # pre-refactor reference path that rescans per step.  Both produce
+    # bit-identical audit trails and stats.
+    scheduler: str = "indexed"
 
     def __post_init__(self):
         if not self.tenants:
             raise ValueError("ServingConfig needs at least one TenantSpec")
+        if self.audit not in ("full", "counters"):
+            raise ValueError(
+                f"audit must be 'full' or 'counters', got {self.audit!r}")
+        if self.scheduler not in ("indexed", "linear"):
+            raise ValueError(
+                "scheduler must be 'indexed' or 'linear', got "
+                f"{self.scheduler!r}")
         if self.fault is not None and not self.loader.sharded:
             raise ValueError(
                 "ServingConfig(fault=...) requires "
@@ -341,7 +359,9 @@ def build_server(config: ServingConfig, cls=None):
               device_budget_mb=config.loader.device_budget_mb,
               migrate=config.loader.migrate,
               compress=config.loader.compress,
-              fault=config.fault)
+              fault=config.fault,
+              audit=config.audit,
+              scheduler=config.scheduler)
     ps = config.predictor
     for spec in config.tenants:
         from repro.configs import get_config
@@ -351,6 +371,10 @@ def build_server(config: ServingConfig, cls=None):
             min_fit_samples=ps.min_fit_samples,
             refit_interval=ps.refit_interval,
             fit_steps=ps.fit_steps)
+        # The linear reference scheduler keeps the pre-refactor
+        # O(history) predict cost (bit-identical values either way) so
+        # engine_scale's A/B measures against a faithful baseline.
+        predictor.full_history_predict = config.scheduler == "linear"
         if config.executor == "sim":
             srv.register_tenant(spec.name, SimTenant(
                 spec.name, cfg, precisions=spec.precisions,

@@ -8,9 +8,9 @@ residency management but required for a real deployment.
 from __future__ import annotations
 
 import itertools
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, KeysView, List, Optional
 
 import numpy as np
 
@@ -37,7 +37,10 @@ class Batch:
 
 class Batcher:
     def __init__(self, max_batch: int = 8, pad_id: int = 0):
-        self.queues: Dict[str, List[Request]] = defaultdict(list)
+        # Deques: head pops (next_batch, continuous join) and head
+        # re-inserts (preemption requeue) are O(1) instead of shifting
+        # the whole tenant queue.
+        self.queues: Dict[str, Deque[Request]] = defaultdict(deque)
         self.max_batch = max_batch
         self.pad_id = pad_id
         # Instance-scoped so two server builds in one process each start
@@ -60,8 +63,16 @@ class Batcher:
         """Depth of one tenant's queue."""
         return len(self.queues.get(app, ()))
 
-    def queued_apps(self) -> Tuple[str, ...]:
-        return tuple(self.queues)
+    def queued_apps(self) -> KeysView[str]:
+        """Live view of tenants with queued work, in insertion order.
+
+        A view, not a copy: callers that only iterate (and do not
+        mutate the queue table mid-loop) avoid materializing a fresh
+        tuple every scheduler step.  Callers that *do* mutate mid-loop
+        (e.g. the continuous-batching join, where a preemption requeue
+        can insert new keys) must snapshot with ``list(...)`` first.
+        """
+        return self.queues.keys()
 
     def head_arrival(self, app: str) -> Optional[float]:
         """Arrival time of the tenant's oldest queued request."""
@@ -84,9 +95,9 @@ class Batcher:
                   key=lambda a: (len(self.queues[a]),
                                  -self.queues[a][0].arrival_ms,
                                  -self.queues[a][0].rid))
-        reqs = self.queues[app][: self.max_batch]
-        self.queues[app] = self.queues[app][self.max_batch:]
-        if not self.queues[app]:
+        q = self.queues[app]
+        reqs = [q.popleft() for _ in range(min(self.max_batch, len(q)))]
+        if not q:
             del self.queues[app]
         S = max(len(r.prompt) for r in reqs)
         prompts = np.full((len(reqs), S), self.pad_id, np.int32)

@@ -31,7 +31,7 @@ the manager, the loader protocol, and plain callbacks.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
                     Sequence, Tuple)
 
@@ -90,6 +90,12 @@ class FaultSpec:
             norm.append((float(t), int(chip), str(kind)))
         norm.sort(key=lambda e: e[0])
         object.__setattr__(self, "events", tuple(norm))
+
+    def with_seed(self, seed: int) -> "FaultSpec":
+        """The same schedule under a different injector seed — the
+        seed-sweep idiom: ``spec.with_seed(s)`` per benchmark seed,
+        each run bit-reproducible on its own stream."""
+        return replace(self, seed=seed)
 
 
 def _fill(remaining: float, rooms: Dict[int, float]

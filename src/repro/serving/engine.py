@@ -35,10 +35,12 @@ from __future__ import annotations
 
 import asyncio
 import functools
+import itertools
 import math
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import (Any, Callable, Dict, List, Mapping, Optional,
+from typing import (Any, Callable, Deque, Dict, List, Mapping, Optional,
                     Protocol, Sequence, Tuple)
 
 import jax
@@ -225,11 +227,35 @@ class ServingEngine:
                  batch_window_ms: float = 0.0,
                  executor: Optional[Executor] = None,
                  loader: Optional[LoaderChannel] = None,
-                 continuous: bool = False):
+                 continuous: bool = False,
+                 audit: str = "full",
+                 scheduler: str = "indexed"):
+        if audit not in ("full", "counters"):
+            raise ValueError(
+                f"audit must be 'full' or 'counters', got {audit!r}")
+        if scheduler not in ("indexed", "linear"):
+            raise ValueError(
+                f"scheduler must be 'indexed' or 'linear', got "
+                f"{scheduler!r}")
         self.host = host
         self.batcher = Batcher(max_batch=max_batch)
         self.max_batch = max_batch
         self.batch_window_ms = batch_window_ms
+        # Audit level: "full" records an EngineEvent (with device/usage
+        # snapshots) at every state change — required by the invariant
+        # tests and the default everywhere; "counters" keeps only the
+        # event count, for large-scale replays where the per-event
+        # snapshots dominate the hot path.
+        self.audit = audit
+        # Scheduler: "indexed" (default) answers "when does the next
+        # thing happen" from incremental structures (loader readiness
+        # heap, memoized prediction triggers, online overlap
+        # accounting); "linear" is the retained pre-refactor reference
+        # that rescans on every idle step.  Both produce bit-identical
+        # audit trails and stats — proven by
+        # tests/test_engine_equivalence.py.
+        self.scheduler = scheduler
+        self.indexed = scheduler == "indexed"
         # Continuous batching: the admission unit is the request, not the
         # batch — requests join/leave the running decode per step and
         # charge/free page-granular KV (requires a KVPagePool on the
@@ -238,9 +264,18 @@ class ServingEngine:
         self.continuous = continuous
         self.results: List[RequestResult] = []
         self.events: List[EngineEvent] = []
+        self.events_emitted = 0  # total, counted even under audit="counters"
+        self.warm_served = 0  # incremental Σ r.warm over self.results
         self.kv_downgrades = 0  # requester shrank itself to fit its cache
         self.weight_failures = 0  # batches whose weights were unprocurable
         self._now = 0.0  # loop clock (audit events outside execute paths)
+        # Maintenance-skip validity (continuous loop, indexed host):
+        # True only while NOTHING invalidating happened since the last
+        # executed maintenance pass — no arrival, no load commit, no
+        # admission, no retirement.  Together with the host's
+        # ``maint_valid_ms`` horizon it lets the loop skip maintenance
+        # calls that are provably identical no-ops.
+        self._maint_clean = False
         # None => route through TenantExecutor.execute (the protocol
         # path); a callable overrides it (legacy injection point).
         self._executor = executor
@@ -250,14 +285,23 @@ class ServingEngine:
         self.loader = loader
         if loader is not None:
             loader.on_event = self._loader_event
+            # Select the loader's readiness heap over its linear scan
+            # (both return the identical min; protocol fakes that lack
+            # the attribute simply keep scanning).
+            try:
+                loader.indexed_ready = self.indexed
+            except AttributeError:
+                pass
         # Elastic mesh controller (chip loss & recovery); installed by
         # EdgeServer.start when the config carries a FaultSpec.  Polled
         # in the maintenance pass and folded into the idle wake-up.
         self.elastic = None
         # Execution spans (start, end, app) inside the current loader
         # window — used to measure how much of each load was hidden
-        # behind other tenants' prefill/decode.
-        self._spans: List[Tuple[float, float, str]] = []
+        # behind other tenants' prefill/decode.  Spans append in loop
+        # order, so their end times are monotone non-decreasing and the
+        # prune in _reap_loads is a prefix popleft.
+        self._spans: Deque[Tuple[float, float, str]] = deque()
         # Cluster-tier local clock: where cluster_advance left this
         # server's loop (a batch may have run past the last horizon).
         self._cluster_now = 0.0
@@ -281,6 +325,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _event(self, t_ms: float, kind: str, app: str, kv_mb: float) -> None:
+        self.events_emitted += 1
+        if self.audit != "full":
+            return  # counters level: count the event, skip the snapshot
         st = self.host.manager.state
         self.events.append(EngineEvent(
             t_ms, EventKind(kind), app, kv_mb, st.used_mb, st.free_mb,
@@ -306,6 +353,7 @@ class ServingEngine:
     def submit(self, req: Request, now_ms: float) -> None:
         """Enqueue a request; feeds the tenant's RNN arrival predictor."""
         req.arrival_ms = now_ms if req.arrival_ms == 0.0 else req.arrival_ms
+        self._maint_clean = False  # new arrival: predictions shift
         self.host.tenants[req.app].predictor.observe_request(
             req.arrival_ms)
         self.batcher.submit(req)
@@ -438,6 +486,8 @@ class ServingEngine:
             results[j] = RequestResult(
                 r.rid, batch.app, r.arrival_ms, now_ms, r_done,
                 adm.warm, False, adm.bits, B, share)
+        if adm.warm:
+            self.warm_served += B
         self.results.extend(results)
         return results, service_ms, tokens
 
@@ -451,12 +501,16 @@ class ServingEngine:
         If no variant fits, the batch is admitted anyway so the failure
         is counted the normal way."""
         mgr = self.host.manager
+        # queued_apps() is a live keys view (no per-step copy); nothing
+        # in this loop inserts or drops queue keys, so iterating it
+        # directly is safe.
         for app in self.batcher.queued_apps():
             if app in self.loader.inflight:
                 continue
             if mgr.state.tenants[app].loaded is not None:
                 continue
-            q = self.batcher.queues[app][: self.max_batch]
+            q = list(itertools.islice(self.batcher.queues[app],
+                                      self.max_batch))
             total_len = (max(len(r.prompt) for r in q)
                          + max(r.max_new for r in q))
             cfg = self.host.tenants[app].cfg
@@ -505,29 +559,74 @@ class ServingEngine:
                     RA.ResidencyPlan(RA.procure_actions(plan, staged=True)),
                     now, demand=True)
 
+    def _note_span(self, t0: float, t1: float, app: str) -> None:
+        """Record one retired execution span; on the indexed path, also
+        fold it into every in-flight load's online overlap accumulator.
+        The accumulator adds the identical per-interval contributions,
+        in the identical span order, that the reap-time scan would sum
+        — same float additions, bit-identical ``load_overlap_ms``."""
+        self._spans.append((t0, t1, app))
+        if not self.indexed or self.loader is None:
+            return
+        for ld in self.loader.inflight.values():
+            # Protocol fakes without the accumulator fields simply keep
+            # the reap-time scan (their records carry no busy values).
+            if (ld.app == app or not getattr(ld, "staging", False)
+                    or not hasattr(ld, "ol_key")):
+                continue
+            key = (ld.t_enqueue_ms, ld.ready_ms)
+            if ld.ol_key != key:
+                # First span since this load's window was (re)opened:
+                # no earlier span can intersect it (spans retire with
+                # end ≤ the loop clock that opened the window), so the
+                # accumulator starts at zero.
+                shards = getattr(ld, "shards", None)
+                ld.ol_key = key
+                ld.ol_ivals = ([(sh.t_start_ms, sh.ready_ms)
+                                for sh in shards] if shards else [key])
+                ld.ol_busy = [0.0] * len(ld.ol_ivals)
+            for k, (a0, a1) in enumerate(ld.ol_ivals):
+                if t1 > a0 and t0 < a1:
+                    ld.ol_busy[k] += min(t1, a1) - max(t0, a0)
+
     def _reap_loads(self, now: float) -> None:
         """Commit loads whose virtual transfer has finished and measure
         how much of each load interval was hidden behind *other*
         tenants' execution — the paper's overlap claim, quantified.
         Sharded loads measure per shard interval (which also credits the
         landed shards of a cancelled load: that transfer was real and
-        really was hidden); single-stream loads over the whole load."""
+        really was hidden); single-stream loads over the whole load.
+
+        A record carrying online-accumulated busy values (indexed
+        scheduler) skips the span scan; records without them (linear
+        reference path, protocol fakes, loads that saw no spans) measure
+        by scanning the retained spans exactly as before."""
         for rec in self.loader.reap(now):
+            self._maint_clean = False  # a commit changed residency
             intervals = (rec.shard_intervals
                          or ((rec.t_enqueue_ms, rec.t_ready_ms,
                               rec.load_ms),))
+            busies = getattr(rec, "overlap_busy", None)
             overlap = 0.0
-            for t0, t1, cap in intervals:
-                busy = sum(min(e, t1) - max(s, t0)
-                           for s, e, a in self._spans
-                           if a != rec.app and e > t0 and s < t1)
-                overlap += min(busy, cap)
+            if busies is not None:
+                for (t0, t1, cap), busy in zip(intervals, busies):
+                    overlap += min(busy, cap)
+            else:
+                for t0, t1, cap in intervals:
+                    busy = sum(min(e, t1) - max(s, t0)
+                               for s, e, a in self._spans
+                               if a != rec.app and e > t0 and s < t1)
+                    overlap += min(busy, cap)
             rec.overlap_ms = overlap
             self.loader.load_overlap_ms += rec.overlap_ms
         horizon = min((ld.t_enqueue_ms
                        for ld in self.loader.inflight.values()),
                       default=now)
-        self._spans = [sp for sp in self._spans if sp[1] > horizon]
+        # Span ends are monotone (appended in loop order), so pruning
+        # everything that ended at/before the horizon is a prefix pop.
+        spans = self._spans
+        while spans and spans[0][1] <= horizon:
+            spans.popleft()
 
     def run_trace(self, requests: Sequence[Request]) -> dict:
         """Closed-loop trace replay: arrivals enter the batcher at their
@@ -605,7 +704,7 @@ class ServingEngine:
             _, service_ms, _ = self.execute_batch(
                 batch, now, charge_load=self.loader is None)
             now += service_ms
-            self._spans.append((t0, now, batch.app))
+            self._note_span(t0, now, batch.app)
         if self.loader is not None:
             # Trace drained: commit whatever is still staging so the
             # audit trail balances and residency reflects the weights.
@@ -691,7 +790,7 @@ class ServingEngine:
             _, service_ms, _ = self.execute_batch(
                 batch, now, charge_load=self.loader is None)
             now += service_ms
-            self._spans.append((t0, now, batch.app))
+            self._note_span(t0, now, batch.app)
         self._cluster_now = now
         return t_next
 
@@ -728,7 +827,7 @@ class ServingEngine:
                 continue
             seqs.remove(victim)
             self._event(now, "preempt", vapp, -victim.kv_mb)
-            self.batcher.queues[vapp].insert(0, victim.req)
+            self.batcher.queues[vapp].appendleft(victim.req)
 
     def _join_requests(self, active: Dict[str, List[_ActiveSeq]],
                        now: float) -> float:
@@ -742,6 +841,14 @@ class ServingEngine:
         mgr = self.host.manager
         pool = mgr.state.kv_pool
         inflight = self.loader.inflight if self.loader is not None else {}
+        if self.batcher.queues:
+            # Queued work may admit (memory mutates) or stay queued
+            # (skip is blocked anyway): conservatively invalidate.
+            self._maint_clean = False
+        # Snapshot, not the live view: _requeue_preempted below can
+        # insert brand-new queue keys mid-iteration (a preempted victim
+        # whose tenant had drained its queue), which would blow up a
+        # live keys-view iteration.
         for app in list(self.batcher.queued_apps()):
             if app in inflight:
                 continue  # weights mid-staging: join after the commit
@@ -770,7 +877,7 @@ class ServingEngine:
                         self.loader.take_use(app, False)
                     if not adm.kv_rejected:
                         self.weight_failures += 1
-                    self.batcher.queues[app].pop(0)
+                    self.batcher.queues[app].popleft()
                     self._event(now, "reject", app, need)
                     self.results.append(RequestResult(
                         req.rid, app, req.arrival_ms, now, now, False,
@@ -783,7 +890,7 @@ class ServingEngine:
                     # Synchronous cold load inside the admit: the loop
                     # clock pays for the transfer (reactive semantics).
                     now += tr.zoo.by_bits(adm.bits).load_ms
-                self.batcher.queues[app].pop(0)
+                self.batcher.queues[app].popleft()
                 self._event(now, "admit", app, adm.kv_mb)
                 active[app].append(_ActiveSeq(
                     req=req, start_ms=now, warm=adm.warm, bits=adm.bits,
@@ -798,9 +905,11 @@ class ServingEngine:
         batch anymore) and record the result."""
         mgr = self.host.manager
         pool = mgr.state.kv_pool
+        self._maint_clean = False  # the freed cache changes free_mb
         mgr.release_kv(s.req.app, s.kv_mb,
                        seq=s.req.rid if pool is not None else None)
         self._event(now, "retire", s.req.app, -s.kv_mb)
+        self.warm_served += s.warm
         self.results.append(RequestResult(
             s.req.rid, s.req.app, s.req.arrival_ms, s.start_ms, now,
             s.warm, False, s.bits, s.batch_size, s.kv_mb))
@@ -827,7 +936,23 @@ class ServingEngine:
                 if self.elastic is not None:
                     self.elastic.poll(now)
                     self._requeue_preempted(active, now)
-                self.host.predict_and_preload(now)
+                # Maintenance skip: the host's last fully-skipped pass
+                # published a horizon (``maint_valid_ms``) before which
+                # its decisions cannot flip.  If nothing invalidating
+                # happened since (``_maint_clean``), no work is queued
+                # or staging, fits land synchronously (no background
+                # thread can mutate a predictor mid-skip), and no
+                # elastic controller can fire, the call is provably the
+                # identical no-op — don't make it.
+                host = self.host
+                if not (self._maint_clean and self.elastic is None
+                        and now < getattr(host, "maint_valid_ms",
+                                          -math.inf)
+                        and getattr(host, "sync_predictor_fits", False)
+                        and not self.batcher.queues
+                        and not self.loader.inflight):
+                    host.predict_and_preload(now)
+                    self._maint_clean = True
                 self._stage_demand_loads(now)
             now = self._join_requests(active, now)
             apps = [a for a in sorted(active) if active[a]]
@@ -849,7 +974,7 @@ class ServingEngine:
                 -min(s.start_ms for s in active[a]), a))
             t0 = now
             now += self._step_ms(app, len(active[app]))
-            self._spans.append((t0, now, app))
+            self._note_span(t0, now, app)
             finished = []
             for s in active[app]:
                 s.steps_done += 1
@@ -937,14 +1062,24 @@ class ServingEngine:
                 repromotions=self.elastic.repromotions)
         if not self.results:
             return ServingStats(**kw)
-        kw["warm_ratio"] = (sum(r.warm for r in self.results)
-                            / len(self.results))
-        span_ms = (max(r.done_ms for r in self.results)
-                   - min(r.arrival_ms for r in self.results))
+        # One pass over results: warm count, the global trace span, and
+        # the per-tenant buckets all come out of a single walk instead
+        # of a fresh min/max/filter scan per aggregate and per tenant.
+        warm = 0
+        origin = math.inf
+        t_end = -math.inf
+        by_app: Dict[str, List[RequestResult]] = {}
+        for r in self.results:
+            warm += r.warm
+            origin = min(origin, r.arrival_ms)
+            t_end = max(t_end, r.done_ms)
+            by_app.setdefault(r.app, []).append(r)
+        kw["warm_ratio"] = warm / len(self.results)
+        span_ms = t_end - origin
         kw["requests_per_sec"] = (
             len(self.results) / (span_ms / 1e3) if span_ms > 0 else 0.0)
-        for app in sorted({r.app for r in self.results}):
-            rs = [r for r in self.results if r.app == app]
+        for app in sorted(by_app):
+            rs = by_app[app]
             ok = [r.latency_ms for r in rs if not r.failed]
             lat = (dict(zip(
                 ("p50_ms", "p95_ms", "p99_ms"),
@@ -972,6 +1107,10 @@ class ServingEngine:
         sharded mesh, every chip's weights + shard claims must respect
         the per-device budget *that held at event time* (chip loss and
         recovery change the ledger mid-run)."""
+        if self.audit != "full":
+            raise RuntimeError(
+                "check_event_invariant needs audit='full' (per-event "
+                f"usage snapshots); this engine runs audit={self.audit!r}")
         budget = (budget_mb if budget_mb is not None
                   else self.host.manager.state.budget_mb)
         for ev in self.events:
@@ -1005,6 +1144,33 @@ def trace_from_workload(wl: Workload, cfgs: Dict[str, ModelConfig], *,
         plen = int(rng.integers(*prompt_len))
         prompt = rng.integers(
             0, cfgs[app].vocab_size, plen).astype(np.int32)
+        reqs.append(Request(app=app, prompt=prompt, max_new=max_new,
+                            arrival_ms=t))
+    return reqs
+
+
+def fast_trace_from_workload(wl: Workload, cfgs: Dict[str, ModelConfig],
+                             *, seed: int = 0,
+                             prompt_len: Tuple[int, int] = (4, 12),
+                             max_new: int = 8) -> List[Request]:
+    """Vectorized materializer for large replays: one batched draw for
+    every prompt length, prompt arrays shared from a per-(app, length)
+    pool.  The sim executor's virtual service time reads only the
+    prompt *length*, so sharing the array is behaviour-identical there;
+    don't use this with the real executor, where token content reaches
+    the model.  Draw order differs from :func:`trace_from_workload`
+    (whose per-request order is contractual), so this is a separate
+    entry point, not a fast path inside it."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(*prompt_len, size=len(wl.requests))
+    pool: Dict[Tuple[str, int], np.ndarray] = {}
+    reqs = []
+    for (t, app), plen in zip(wl.requests, lens):
+        key = (app, int(plen))
+        prompt = pool.get(key)
+        if prompt is None:
+            prompt = pool[key] = rng.integers(
+                0, cfgs[app].vocab_size, int(plen)).astype(np.int32)
         reqs.append(Request(app=app, prompt=prompt, max_new=max_new,
                             arrival_ms=t))
     return reqs

@@ -70,6 +70,7 @@ from repro.core import actions as A
 from repro.core.model_zoo import ModelVariant
 from repro.core.policies import ProcurePlan
 from repro.distributed.compression import wire_compression_ratio
+from repro.serving.events import MonotoneQueue
 
 INF = math.inf
 
@@ -97,10 +98,28 @@ class InflightLoad:
     # the claim — the new record owns it.
     state: str = field(default="staging")
     on_action: Optional[ActionHook] = None  # fires at commit
+    # Online overlap accounting (indexed scheduler): the engine folds
+    # each execution span into these as it retires — ``ol_ivals`` are
+    # the load's transfer intervals, ``ol_busy`` the per-interval busy
+    # time accumulated so far, ``ol_key`` the (enqueue, ready) window
+    # the accumulation is valid for (an in-place shrink re-times the
+    # window, invalidating the accumulated values by key mismatch).
+    ol_key: Optional[Tuple[float, float]] = None
+    ol_ivals: Optional[List[Tuple[float, float]]] = None
+    ol_busy: Optional[List[float]] = None
 
     @property
     def staging(self) -> bool:
         return self.state == "staging"
+
+    def ol_take(self) -> Optional[Tuple[float, ...]]:
+        """The accumulated per-interval busy times, or None when the
+        accumulator is absent or stale (then the reap-time span scan is
+        the fallback)."""
+        if (self.ol_busy is None
+                or self.ol_key != (self.t_enqueue_ms, self.ready_ms)):
+            return None
+        return tuple(self.ol_busy)
 
 
 @dataclass
@@ -119,6 +138,9 @@ class LoadRecord:
     # landed shards count honestly even when the load never commits.
     shard_intervals: Optional[Tuple[Tuple[float, float, float], ...]] = None
     partial: bool = False  # landed shards of a cancelled sharded load
+    # Per-interval busy time accumulated online by the indexed engine
+    # (parallel to the intervals above); None = measure by span scan.
+    overlap_busy: Optional[Tuple[float, ...]] = None
 
 
 class BackgroundLoader:
@@ -159,6 +181,14 @@ class BackgroundLoader:
         self._fit_pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="predictor-fit")
         self.inflight: Dict[str, InflightLoad] = {}
+        # Readiness heap for the indexed scheduler: every (re)timed
+        # in-flight load pushes an entry; stale entries (committed /
+        # cancelled / shrunk-and-restaged records) are lazily dropped at
+        # peek.  ``indexed_ready`` selects it over the linear scan — the
+        # engine sets it from ``ServingConfig.scheduler``; both paths
+        # return the identical float (min over live ready_ms).
+        self.indexed_ready = False
+        self._ready = MonotoneQueue()
         self._committed: Dict[str, LoadRecord] = {}
         self.history: List[LoadRecord] = []
         self.on_event: Optional[LoadEventHook] = None
@@ -320,6 +350,7 @@ class BackgroundLoader:
                 future=self.stage(act.app, act.variant),
                 on_action=on_action)
             self.inflight[act.app] = ld
+            self._ready.push(ld.ready_ms, (act.app, ld))
             self.wire_mb_staged += (act.variant.size_mb
                                     * self.wire_ratio(act.variant))
             if demand:
@@ -334,7 +365,17 @@ class BackgroundLoader:
             on_action(act, now_ms)
         return None
 
+    def _ready_live(self, t: float, payload) -> bool:
+        """A heap entry is live iff its record is still the in-flight
+        load for its tenant, still staging, and still timed at ``t`` —
+        commits, cancels, and shrink restages all invalidate by value."""
+        app, ld = payload
+        return (self.inflight.get(app) is ld and ld.staging
+                and ld.ready_ms == t)
+
     def earliest_ready(self) -> float:
+        if self.indexed_ready:
+            return self._ready.peek(self._ready_live)
         return min((ld.ready_ms for ld in self.inflight.values()),
                    default=INF)
 
@@ -363,7 +404,7 @@ class BackgroundLoader:
                 # overlap it can hide) really is shorter.
                 load_ms=ld.ready_ms - ld.t_enqueue_ms,
                 t_enqueue_ms=ld.t_enqueue_ms, t_ready_ms=ld.ready_ms,
-                demand=ld.demand)
+                demand=ld.demand, overlap_busy=ld.ol_take())
             self._committed[app] = rec
             self.history.append(rec)
             self.loads_committed += 1
@@ -420,6 +461,7 @@ class BackgroundLoader:
         ld.charge_mb = new_charge
         ld.t_enqueue_ms = now_ms
         ld.ready_ms = now_ms + self._wire_ms(variant)
+        self._ready.push(ld.ready_ms, (app, ld))  # re-time: old entry stale
         ld.future = self.stage(app, variant)
         self.wire_mb_staged += (variant.size_mb
                                 * self.wire_ratio(variant))

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import actions as RA
 from repro.core.manager import EdgeMultiAI
+from repro.core.policies import Policy
 from repro.core.model_zoo import ModelVariant, ModelZoo
 from repro.core.predictor import RequestPredictor
 from repro.models import transformer as T
@@ -216,7 +217,9 @@ class EdgeServer:
                  adaptive_delta: bool = False,
                  continuous: bool = False,
                  kv_page_mb: float = 0.0,
-                 fault=None):
+                 fault=None,
+                 audit: str = "full",
+                 scheduler: str = "indexed"):
         self.tenants: Dict[str, Any] = {}  # TenantExecutor implementations
         self.budget_mb = budget_mb
         self.policy = policy
@@ -253,6 +256,18 @@ class EdgeServer:
         # installs an ElasticController that fires chip-down drain plans
         # and chip-up rebalances on the engine clock.
         self.fault = fault
+        # Engine fast-path knobs (see ServingEngine): audit level and
+        # event-scheduling mode.  scheduler="indexed" also memoizes the
+        # per-tenant prediction triggers here (the predictors' forward
+        # pass re-materializes full arrival history on every call).
+        self.audit = audit
+        self.scheduler = scheduler
+        self._tpred_memo: Dict[str, Tuple[tuple, float]] = {}
+        # Horizon before which a repeat of the last maintenance pass is
+        # provably the identical no-op (every tenant took the indexed
+        # fast skip).  The engine's continuous loop consults it — see
+        # predict_and_preload; -inf means "never skip".
+        self.maint_valid_ms = float("-inf")
         self.manager: Optional[EdgeMultiAI] = None
         self.engine = None  # type: Optional["ServingEngine"]
         self.loader = None  # type: Optional["BackgroundLoader"]
@@ -355,7 +370,8 @@ class EdgeServer:
         self.engine = ServingEngine(
             self, max_batch=self.max_batch,
             batch_window_ms=self.batch_window_ms, loader=self.loader,
-            continuous=self.continuous)
+            continuous=self.continuous, audit=self.audit,
+            scheduler=self.scheduler)
         if self.fault is not None:
             from repro.serving.elastic import ElasticController
             ctrl = ElasticController(self.fault, self.manager,
@@ -469,6 +485,25 @@ class EdgeServer:
             self.loader.close()
 
     # ------------------------------------------------------------------
+    def _predict_time(self, name: str, predictor) -> float:
+        """``predictor.predict_next_time()``, memoized on the indexed
+        scheduler.  The prediction is a pure function of the predictor's
+        observable state — arrival history (appends only), trained
+        params (change only when ``fits`` increments), and the last
+        arrival — so caching on that key returns the identical float
+        while skipping the O(history) forward pass the linear path runs
+        once per tenant per maintenance pass."""
+        if self.scheduler != "indexed":
+            return predictor.predict_next_time()
+        key = (len(predictor.history), predictor.fits,
+               predictor.last_time)
+        hit = self._tpred_memo.get(name)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        t = predictor.predict_next_time()
+        self._tpred_memo[name] = (key, t)
+        return t
+
     def predict_and_preload(self, now_ms: float) -> None:
         """Drive the RNN request predictors -> proactive loads.
 
@@ -484,12 +519,102 @@ class EdgeServer:
         the loader's background fit worker — the live path runs on the
         mean-gap fallback until the first fit lands, then on the
         trained RNN, and never blocks on training."""
+        # Indexed fast path: when a tenant's memoized prediction is
+        # current and no fit is due, its pass can only end in "do
+        # nothing" — prove it with cheap reads and skip the planner.
+        # Soundness: (a) the prediction is rewritten so state matches
+        # the linear pass even when the memo was filled by
+        # ``next_prefetch_trigger``; (b) Δ is recomputed fresh when
+        # adaptive (it drifts with arrival residuals); (c) outside
+        # [t_pred−Δ−θ, t_pred+Δ] nothing fires, and inside it a tenant
+        # with queued requests is demand-loaded, never prefetched —
+        # both exactly the linear conditions; (d) for the
+        # un-overridden base ``plan_prefetch`` hook the eviction-free
+        # surplus decision is replicated verbatim against a pass-level
+        # ``free_mb`` (one budget sum per pass, dropped whenever a
+        # full pass may have mutated the state).  A custom policy hook
+        # gets no structural credit — the full pass runs so its plan
+        # is actually consulted.  This loop is the engine's hottest
+        # code (once per tenant per event-loop iteration), hence the
+        # hoisted locals and the inlined window/fit/hook checks.
+        mgr = self.manager
+        fast = self.scheduler == "indexed" and self.loader is not None
+        free_mb = None  # one budget sum per pass; reset on mutation
+        # Skip horizon accounting: while every tenant takes the fast
+        # skip, the pass decisions can only flip at the earliest
+        # still-ahead window opening (t_pred − Δ − θ) — tenants already
+        # in or past their window stay no-ops until an arrival, fit, or
+        # memory mutation, all of which reset the engine's clean flag.
+        valid = float("inf")
+        all_skipped = fast
+        if fast:
+            memo = self._tpred_memo
+            tstates = mgr.state.tenants
+            queues = (self.engine.batcher.queues
+                      if self.engine is not None else None)
+            delta_const = None if mgr.adaptive_delta else mgr.delta
+            policy = mgr.policy
+            base_hook = (policy is not None and
+                         type(policy).plan_prefetch is Policy.plan_prefetch)
         for name, tr in self.tenants.items():
+            if fast:
+                p = tr.predictor
+                hit = memo.get(name)
+                n_hist = len(p.history)
+                if (hit is not None
+                        and hit[0] == (n_hist, p.fits, p.last_time)
+                        # fit_due is False while the history is short
+                        # (n < max(min_fit_samples, context+2)); only
+                        # past that must the refit cadence be asked.
+                        and (n_hist < p.min_fit_samples
+                             or n_hist < p.context + 2
+                             or not p.fit_due())):
+                    t_pred = hit[1]
+                    t = tstates[name]
+                    t.predicted_next = t_pred  # == set_prediction
+                    delta = (delta_const if delta_const is not None
+                             else mgr.delta_for(name))
+                    largest = t.zoo.variants[0]  # zoo sorts desc
+                    start = t_pred - delta - largest.load_ms
+                    if now_ms < start:  # ahead of the window
+                        if start < valid:
+                            valid = start
+                        continue
+                    if now_ms > t_pred + delta:  # window passed
+                        continue
+                    if queues is not None and queues.get(name):
+                        continue  # queued: demand path, not prefetch
+                    if policy is None:
+                        continue  # manager.plan_prefetch is None
+                    if base_hook:
+                        if (t.loaded is largest
+                                or t.inflight_mb > 0.0):
+                            continue  # the hook's two early outs
+                        if free_mb is None:
+                            free_mb = mgr.state.free_mb
+                        cur = t.loaded.size_mb if t.loaded else 0.0
+                        planless = True
+                        for v in t.zoo.variants:  # mirror the hook
+                            if t.loaded is not None \
+                                    and v.size_mb <= cur:
+                                break
+                            if v.size_mb - cur <= free_mb:
+                                planless = False  # hook would plan
+                                break
+                        if planless:
+                            continue
+                    # In-window, unqueued, and the hook might plan:
+                    # fall through to the full pass below.
+            # The full pass may mutate the memory state (stage a load,
+            # reserve a claim): drop the pass-level free_mb cache, and
+            # give the engine no skip credit for this pass.
+            all_skipped = False
+            free_mb = None
             if self.loader is not None and tr.predictor.fit_due():
                 fut = self.loader.submit_fit(tr.predictor)
                 if fut is not None and self.sync_predictor_fits:
                     fut.result()  # lands at this exact virtual instant
-            t_pred = tr.predictor.predict_next_time()
+            t_pred = self._predict_time(name, tr.predictor)
             self.manager.set_prediction(name, t_pred)
             theta = tr.zoo.largest.load_ms
             # Per-tenant Δ: the configured constant, or the residual-
@@ -517,7 +642,9 @@ class EdgeServer:
                             RA.ResidencyPlan(
                                 RA.procure_actions(plan, staged=True)),
                             now_ms, predicted_ms=t_pred)
-        if self.loader is not None and self.engine is not None:
+        self.maint_valid_ms = valid if all_skipped else float("-inf")
+        if (self.loader is not None and self.engine is not None
+                and self.loader.inflight):  # nothing staged: no-op
             # Per-tenant Δ so staleness agrees with the (possibly
             # adaptive) window that justified the prefetch.
             self.loader.cancel_stale(
@@ -534,7 +661,7 @@ class EdgeServer:
             t = self.manager.state.tenants[name]
             if t.loaded is t.zoo.largest or t.inflight_mb > 0.0:
                 continue
-            trig = (tr.predictor.predict_next_time()
+            trig = (self._predict_time(name, tr.predictor)
                     - self.manager.delta_for(name)
                     - tr.zoo.largest.load_ms)
             if now_ms < trig < out:

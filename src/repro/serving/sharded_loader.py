@@ -234,6 +234,7 @@ class ShardedLoaderChannel(BackgroundLoader):
             future=None, shards=shards, on_action=on_action)
         ld.future = self._dispatch(app, variant, shards, ld)
         self.inflight[app] = ld
+        self._ready.push(ld.ready_ms, (app, ld))
         return ld
 
     # -- plan translation -------------------------------------------------
@@ -327,7 +328,12 @@ class ShardedLoaderChannel(BackgroundLoader):
         off the single-stream schedule (the A/B must differ only in the
         staging accounting).  Shard landings themselves are timestamped
         from the virtual schedule, so reaping them lazily at the next
-        natural wake is exact."""
+        natural wake is exact.  A commit's ``ready_ms`` is fixed at
+        track time (shrinks retire the old record and track a new one),
+        so the base class's readiness heap covers this channel with the
+        same validity predicate."""
+        if self.indexed_ready:
+            return self._ready.peek(self._ready_live)
         return min((ld.ready_ms for ld in self.inflight.values()),
                    default=INF)
 
@@ -366,7 +372,8 @@ class ShardedLoaderChannel(BackgroundLoader):
                 demand=ld.demand,
                 shard_intervals=tuple(
                     (sh.t_start_ms, sh.ready_ms, sh.load_ms)
-                    for sh in ld.shards))
+                    for sh in ld.shards),
+                overlap_busy=ld.ol_take())
             self._committed[app] = rec
             self.history.append(rec)
             self.loads_committed += 1
@@ -408,6 +415,12 @@ class ShardedLoaderChannel(BackgroundLoader):
         the engine's next reap for overlap measurement."""
         landed = [sh for sh in ld.shards if sh.landed]
         if landed:
+            # The online busy values ride along, filtered to the landed
+            # shards so they stay parallel to the record's intervals.
+            busy = ld.ol_take()
+            if busy is not None:
+                busy = tuple(b for sh, b in zip(ld.shards, busy)
+                             if sh.landed)
             self._partials.append(LoadRecord(
                 app=ld.app, bits=ld.variant.bits,
                 load_ms=sum(sh.load_ms for sh in landed),
@@ -417,7 +430,8 @@ class ShardedLoaderChannel(BackgroundLoader):
                 shard_intervals=tuple(
                     (sh.t_start_ms, sh.ready_ms, sh.load_ms)
                     for sh in landed),
-                partial=True))
+                partial=True,
+                overlap_busy=busy))
 
     def _retire_load(self, ld: ShardedInflightLoad) -> bool:
         """Release an abandoned load and queue its partial credit; False
